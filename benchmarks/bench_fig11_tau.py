@@ -1,0 +1,39 @@
+"""Fig. 11: execution time vs τ. Paper claim: Kyiv's time decreases
+monotonically with τ (MINIT/MIWI initially *rise* — an algorithm artifact
+Kyiv does not share)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import KyivConfig, mine, minit_minimal_infrequent
+from repro.data.synth import pumsb_like
+
+from .common import QUICK, Row, timed
+
+
+def run(cfg=QUICK) -> tuple[list[Row], dict]:
+    D = pumsb_like(n=cfg["domain_n"], m=10)
+    taus = cfg["taus"] + [50]
+    kmax = 3
+    t_kyiv, t_minit = [], []
+    for tau in taus:
+        _, tk = timed(mine, D, KyivConfig(tau=tau, kmax=kmax))
+        _, tm = timed(minit_minimal_infrequent, D, tau, kmax)
+        t_kyiv.append(tk)
+        t_minit.append(tm)
+    # count the "initial rise" behaviour
+    kyiv_rises = sum(1 for i in range(len(taus) - 1) if t_kyiv[i + 1] > t_kyiv[i] * 1.15)
+    rows = [
+        Row("fig11/kyiv_vs_tau", t_kyiv[0] * 1e6,
+            f"taus={taus} t={[round(t, 3) for t in t_kyiv]} rises={kyiv_rises}"),
+        Row("fig11/minit_vs_tau", t_minit[0] * 1e6,
+            f"t={[round(t, 3) for t in t_minit]}"),
+    ]
+    return rows, {"taus": taus, "kyiv": t_kyiv, "minit": t_minit}
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run()[0])

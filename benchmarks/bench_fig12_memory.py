@@ -1,0 +1,33 @@
+"""Fig. 12: memory consumption vs k_max. The paper's claim: memory is
+dominated by level (itemset-rows) storage, with an 'equator' level where the
+stored level peaks; when k = k_max only one level is held."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import KyivConfig, mine
+from repro.data.synth import pumsb_like
+
+from .common import QUICK, Row
+
+
+def run(cfg=QUICK) -> tuple[list[Row], dict]:
+    D = pumsb_like(n=cfg["domain_n"], m=10)
+    rows, raw = [], {}
+    for kmax in range(2, cfg["kmax"] + 2):
+        res = mine(D, KyivConfig(tau=1, kmax=kmax))
+        peak = res.peak_level_bytes
+        per_level = {s.k: s.level_bytes for s in res.stats}
+        rows.append(
+            Row(f"fig12/kmax{kmax}_peak_bytes", peak,
+                f"levels={ {k: v for k, v in sorted(per_level.items())} }")
+        )
+        raw[kmax] = {"peak": peak, "levels": per_level}
+    return rows, raw
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run()[0])

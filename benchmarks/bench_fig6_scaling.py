@@ -1,0 +1,58 @@
+"""Fig. 6: execution time vs rows n (expected ~linear) and vs columns m
+(expected ~exponential), plus memory growth (§5.2.5)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import KyivConfig, mine
+from repro.data.synth import randomized_dataset
+
+from .common import QUICK, Row
+
+
+def run(cfg=QUICK, seed: int = 300) -> tuple[list[Row], dict]:
+    kmax = 3
+    rows = []
+    # vs n (fixed m). The paper takes prefixes of one fixed dataset whose
+    # prefix-tree size has *saturated* (1M rows, every item everywhere) so
+    # runtime ∝ row-set length ∝ n. A small domain puts our scaled bench in
+    # the same saturated regime.
+    m = cfg["scale_m"][2]
+    base = randomized_dataset(max(cfg["scale_n"]), m, d_low=6, d_high=14, seed=seed)
+    t_n = []
+    for n in cfg["scale_n"]:
+        res = mine(base[:n], KyivConfig(tau=1, kmax=kmax))
+        t_n.append((n, res.wall_time, res.peak_level_bytes))
+    # linearity: time per row roughly constant
+    per_row = [t / n for n, t, _ in t_n]
+    lin = max(per_row) / max(min(per_row), 1e-12)
+    rows.append(
+        Row("fig6a/time_vs_n", t_n[-1][1] * 1e6,
+            f"n={[x[0] for x in t_n]} t={[round(x[1], 3) for x in t_n]} "
+            f"per_row_spread={lin:.2f}x (≈linear)")
+    )
+    # vs m (fixed n)
+    n = cfg["scale_n"][2]
+    wide = randomized_dataset(n, max(cfg["scale_m"]), seed=seed + 1)
+    t_m = []
+    for mm in cfg["scale_m"]:
+        res = mine(wide[:, :mm], KyivConfig(tau=1, kmax=kmax))
+        t_m.append((mm, res.wall_time, res.peak_level_bytes))
+    ratios = [t_m[i + 1][1] / max(t_m[i][1], 1e-9) for i in range(len(t_m) - 1)]
+    rows.append(
+        Row("fig6b/time_vs_m", t_m[-1][1] * 1e6,
+            f"m={[x[0] for x in t_m]} t={[round(x[1], 3) for x in t_m]} "
+            f"growth_ratios={[round(r, 2) for r in ratios]} (superlinear)")
+    )
+    rows.append(
+        Row("fig6/memory_vs_m", t_m[-1][2],
+            f"peak_level_bytes={[x[2] for x in t_m]}")
+    )
+    return rows, {"vs_n": t_n, "vs_m": t_m}
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run()[0])

@@ -1,0 +1,69 @@
+"""§Roofline table: aggregates the dry-run artifacts into the per-(arch x
+shape x mesh) three-term roofline table (no new compilation — reads
+artifacts/dryrun/*.json written by repro.launch.dryrun)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Row
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(art_dir: str = ART) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':10s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'dom':>10s} {'useful':>7s} {'fits':>5s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:10s} "
+                         f"{'—':>9s} {'—':>9s} {'—':>9s} {'skip':>10s}")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:10s} ERROR")
+            continue
+        rl = r["roofline"]
+        fits = r.get("memory", {}).get("fits", "?")
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:10s} "
+            f"{rl['t_compute']:9.2e} {rl['t_memory']:9.2e} {rl['t_collective']:9.2e} "
+            f"{rl['dominant']:>10s} {rl.get('useful_flops_ratio', 0):7.2%} {str(fits):>5s}"
+        )
+    return "\n".join(lines)
+
+
+def run() -> tuple[list[Row], dict]:
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    err = [r for r in recs if r.get("status") == "error"]
+    rows = [
+        Row("roofline/cells_ok", 0.0, f"count={len(ok)}"),
+        Row("roofline/cells_skipped", 0.0,
+            f"count={len(skipped)} (long_500k for full-attention archs)"),
+        Row("roofline/cells_error", 0.0, f"count={len(err)}"),
+    ]
+    for dom in ("compute", "memory", "collective"):
+        n = sum(1 for r in ok if r["roofline"]["dominant"] == dom)
+        rows.append(Row(f"roofline/dominant_{dom}", 0.0, f"count={n}"))
+    return rows, {"table": table(recs)}
+
+
+if __name__ == "__main__":
+    rows, extra = run()
+    from .common import emit
+
+    emit(rows)
+    print()
+    print(extra["table"])

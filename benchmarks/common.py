@@ -1,0 +1,60 @@
+"""Shared benchmark utilities: scaled dataset configs + CSV emission.
+
+All mining benches follow the paper's experimental design at a scale that
+fits this single-core CPU container (the paper used 50k x 25 randomized
+datasets and a 32-thread Xeon; we default to 2000 x 10 and note the scale in
+EXPERIMENTS.md). ``--full`` on benchmarks.run selects paper-scale settings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+QUICK = {
+    "rand_n": 2000,
+    "rand_m": 10,
+    "rand_reps": 5,
+    "kmax": 4,
+    "minit_kmax": 4,
+    "scale_n": [500, 1000, 2000, 4000, 8000],
+    "scale_m": [4, 6, 8, 10, 12],
+    "domain_n": 4000,
+    "taus": [1, 5, 10],
+}
+
+FULL = {
+    "rand_n": 50_000,
+    "rand_m": 25,
+    "rand_reps": 50,
+    "kmax": 5,
+    "minit_kmax": 5,
+    "scale_n": [62_500, 125_000, 250_000, 500_000, 1_000_000],
+    "scale_m": [10, 20, 30, 40],
+    "domain_n": 49_046,
+    "taus": [1, 5, 10, 100],
+}
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def emit(rows: list[Row]) -> None:
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())

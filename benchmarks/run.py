@@ -1,0 +1,68 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Quick mode (default) scales the
+paper's datasets to this single-core container; ``--full`` selects
+paper-scale parameters (hours of runtime). Raw per-bench data is saved to
+artifacts/bench/*.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from .common import FULL, QUICK, Row, emit  # noqa: E402
+
+BENCHES = [
+    ("fig2", "bench_fig2_timedist"),
+    ("fig3", "bench_fig3_vertices"),
+    ("fig45", "bench_fig45_ordering"),
+    ("fig6", "bench_fig6_scaling"),
+    ("fig7_10", "bench_fig7_10_vs_minit"),
+    ("fig11", "bench_fig11_tau"),
+    ("fig12", "bench_fig12_memory"),
+    ("fig13", "bench_fig13_parallel"),
+    ("roofline", "bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale datasets")
+    ap.add_argument("--only", default=None, help="comma-separated bench keys")
+    args = ap.parse_args()
+    cfg = FULL if args.full else QUICK
+    only = set(args.only.split(",")) if args.only else None
+
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+    os.makedirs(out_dir, exist_ok=True)
+
+    all_rows: list[Row] = []
+    for key, mod_name in BENCHES:
+        if only and key not in only:
+            continue
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            if key == "roofline":
+                rows, raw = mod.run()
+            else:
+                rows, raw = mod.run(cfg)
+            all_rows.extend(rows)
+            with open(os.path.join(out_dir, f"{key}.json"), "w") as f:
+                json.dump(raw, f, indent=1, default=str)
+            print(f"# {key} done in {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+        except Exception as e:
+            all_rows.append(Row(f"{key}/ERROR", 0.0, repr(e)))
+            print(f"# {key} FAILED: {e!r}", file=sys.stderr)
+
+    emit(all_rows)
+
+
+if __name__ == "__main__":
+    main()

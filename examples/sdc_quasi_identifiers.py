@@ -1,0 +1,54 @@
+"""Statistical disclosure control end-to-end (the paper's §1.1 scenario):
+
+1. build an AOL-style categorical table with rare value combinations,
+2. k-anonymise single columns (the paper's grouping transform),
+3. mine the *remaining* multi-column quasi-identifiers with Kyiv,
+4. report re-identification risk.
+
+  PYTHONPATH=src python examples/sdc_quasi_identifiers.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.sdc.quasi import find_quasi_identifiers, k_anonymize_columns
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n = 5000
+    # user table: zip-like code (zipf), age bucket, gender, query category
+    table = np.stack(
+        [
+            rng.zipf(1.3, n).clip(max=2000),  # "zip": many rare values
+            rng.integers(0, 9, n),  # age bucket
+            rng.integers(0, 2, n),  # gender
+            rng.zipf(1.6, n).clip(max=500),  # "query category"
+        ],
+        axis=1,
+    )
+
+    print("=== before anonymisation ===")
+    rep = find_quasi_identifiers(table, tau=1, kmax=3)
+    print(f"quasi-identifiers (tau=1, kmax=3): {rep.n_quasi_identifiers}")
+    print(f"by size: {rep.by_size()}")
+    print(f"records pinpointed by at least one: {rep.unique_records()}/{n}")
+    print(f"columns by involvement: {rep.risky_columns()}")
+
+    print("\n=== after per-column 5-anonymisation (paper §1.1 transform) ===")
+    anon = k_anonymize_columns(table, k=5)
+    rep2 = find_quasi_identifiers(anon, tau=1, kmax=3)
+    print(f"quasi-identifiers: {rep2.n_quasi_identifiers}")
+    print(f"by size: {rep2.by_size()}")
+    print(f"records pinpointed: {rep2.unique_records()}/{n}")
+    print("\nNote the paper's observation: single-column grouping removes "
+          "1-item identifiers,\nbut multi-column combinations remain — "
+          "exactly what Kyiv enumerates for masking tools.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""The paper's primary contribution: the Kyiv breadth-first minimal
+τ-infrequent itemset miner (Demchuk & Leith 2014), in bitset/TPU form, plus
+the MINIT baseline and a brute-force oracle."""
+
+from .items import ItemTable, itemize, pack_rows_to_bits, bits_popcount, bits_to_rows
+from .preprocess import Preprocessed, preprocess, ORDERINGS
+from .prefix import Level, CandidateBatch, generate_candidates, prefix_group_sizes
+from .support import ItemsetIndex, support_test
+from .bounds import lemma_bound, corollary_bound, apply_bounds
+from .kyiv import KyivConfig, LevelStats, MiningResult, mine, mine_preprocessed
+from .oracle import brute_force_minimal_infrequent
+from .minit import minit_minimal_infrequent
+
+__all__ = [
+    "ItemTable",
+    "itemize",
+    "pack_rows_to_bits",
+    "bits_popcount",
+    "bits_to_rows",
+    "Preprocessed",
+    "preprocess",
+    "ORDERINGS",
+    "Level",
+    "CandidateBatch",
+    "generate_candidates",
+    "prefix_group_sizes",
+    "ItemsetIndex",
+    "support_test",
+    "lemma_bound",
+    "corollary_bound",
+    "apply_bounds",
+    "KyivConfig",
+    "LevelStats",
+    "MiningResult",
+    "mine",
+    "mine_preprocessed",
+    "brute_force_minimal_infrequent",
+    "minit_minimal_infrequent",
+]

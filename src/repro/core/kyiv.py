@@ -1,0 +1,344 @@
+"""The Kyiv algorithm (paper Algorithm 1): breadth-first minimal τ-infrequent
+itemset mining.
+
+Per level-transition (k -> k+1):
+  1. candidate joins of prefix-sharing stored itemsets     (lines 11-20)
+  2. support-itemset test via stored-level lookups         (line 23, §4.4.1)
+  3. at k+1 == k_max: Lemma 4.6 + Corollary 4.7 bounds     (lines 25-29)
+  4. bulk row intersection (the bottleneck, Pallas kernel) (line 31)
+  5. classify: absent/uniform skip (line 32), emit minimal τ-infrequent
+     (lines 34-38 incl. Prop 4.1 mirror expansion), or store (line 41)
+
+Vertex bookkeeping follows §5.2.3: type **A** = emitted minimal τ-infrequent,
+type **B** = visited without performing a row intersection (support- or
+bound-pruned), type **C** = the rest (intersection performed).
+
+The driver is host-orchestrated (level control flow) with device-bulk
+intersections — the same split the paper uses (Java control, hot loop on
+rows), adapted so the hot loop is a TPU kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from ..kernels.intersect import intersect_and_count
+from .items import ItemTable, itemize
+from .preprocess import Preprocessed, preprocess
+from .prefix import CandidateBatch, Level, iter_candidate_batches
+from .support import ItemsetIndex, support_test
+from .bounds import apply_bounds
+
+__all__ = ["KyivConfig", "LevelStats", "MiningResult", "mine", "mine_preprocessed"]
+
+
+@dataclasses.dataclass
+class KyivConfig:
+    tau: int = 1
+    kmax: int = 3
+    ordering: str = "ascending"  # Def. 4.5 / §5.2.4 ablations
+    use_bounds: bool = True  # Lemma 4.6 / Corollary 4.7 at k = k_max
+    engine: str = "numpy"  # numpy | jnp | pallas
+    interpret: bool = True  # Pallas interpret mode (CPU container)
+    indexed_kernel: bool = True
+    expansion: str = "full"  # "full" | "paper" (single-swap, Alg. 1 lines 36-38)
+    seed: int = 0  # random-ordering seed
+    max_pairs_per_chunk: int = 1 << 22  # level spilling / bucket unit
+
+
+@dataclasses.dataclass
+class LevelStats:
+    k: int
+    candidates: int = 0
+    support_pruned: int = 0
+    bound_pruned: int = 0
+    intersections: int = 0
+    emitted: int = 0
+    skipped_absent_uniform: int = 0
+    stored: int = 0
+    time_total: float = 0.0
+    time_intersect: float = 0.0
+    level_bytes: int = 0
+
+    @property
+    def type_a(self) -> int:
+        return self.emitted
+
+    @property
+    def type_b(self) -> int:
+        return self.support_pruned + self.bound_pruned
+
+    @property
+    def type_c(self) -> int:
+        return self.intersections - self.emitted
+
+
+@dataclasses.dataclass
+class MiningResult:
+    """All minimal τ-infrequent itemsets up to k_max, as original item ids."""
+
+    itemsets: list[tuple[tuple[int, ...], int]]  # (sorted item ids, |R_I|)
+    stats: list[LevelStats]
+    prep: Preprocessed
+    config: KyivConfig
+    wall_time: float
+
+    def as_value_sets(self) -> list[tuple[tuple[tuple[int, int], ...], int]]:
+        """Human-readable ((column, value), ...) form, 0-based columns."""
+        t = self.prep.table
+        out = []
+        for ids, cnt in self.itemsets:
+            out.append((tuple((int(t.col[i]), int(t.value[i])) for i in ids), cnt))
+        return out
+
+    def canonical_set(self) -> set[tuple[int, ...]]:
+        return {ids for ids, _ in self.itemsets}
+
+    @property
+    def total_intersections(self) -> int:
+        return sum(s.intersections for s in self.stats)
+
+    @property
+    def total_intersect_time(self) -> float:
+        return sum(s.time_intersect for s in self.stats)
+
+    @property
+    def peak_level_bytes(self) -> int:
+        return max((s.level_bytes for s in self.stats), default=0)
+
+
+def _expand_mirrors(
+    itemset_ids: tuple[int, ...],
+    count: int,
+    mirror_of: dict[int, list[int]],
+    mode: str,
+) -> list[tuple[tuple[int, ...], int]]:
+    """Proposition 4.1 expansion of a canonical result over duplicate items.
+
+    ``mode="paper"`` reproduces Alg. 1 lines 36-38 exactly (one swap at a
+    time). ``mode="full"`` closes over all combinations of swaps — Prop. 4.1
+    applies inductively, so every member of the product is minimal
+    τ-infrequent; the brute-force oracle confirms the full closure is the
+    complete answer (see tests).
+    """
+    out = [(tuple(sorted(itemset_ids)), count)]
+    classes = [[i] + mirror_of.get(i, []) for i in itemset_ids]
+    if mode == "paper":
+        for pos, cls in enumerate(classes):
+            for repl in cls[1:]:
+                swapped = list(itemset_ids)
+                swapped[pos] = repl
+                out.append((tuple(sorted(swapped)), count))
+    else:  # full product closure
+        if any(len(c) > 1 for c in classes):
+            for combo in itertools.product(*classes):
+                out.append((tuple(sorted(combo)), count))
+    # dedupe, preserve order
+    seen: set[tuple[int, ...]] = set()
+    uniq = []
+    for ids, c in out:
+        if ids not in seen:
+            seen.add(ids)
+            uniq.append((ids, c))
+    return uniq
+
+
+def _chunks(total: int, size: int):
+    for s in range(0, total, size):
+        yield s, min(s + size, total)
+
+
+def mine_preprocessed(
+    prep: Preprocessed,
+    config: KyivConfig,
+    *,
+    intersect_fn: Callable[..., Any] | None = None,
+    on_level_end: Callable[[int, dict[str, Any]], None] | None = None,
+    resume_state: dict[str, Any] | None = None,
+) -> MiningResult:
+    """Run Algorithm 1 on a preprocessed item table.
+
+    ``intersect_fn`` allows the sharded driver to substitute a distributed
+    intersection; ``on_level_end`` is the checkpoint hook; ``resume_state``
+    (from a checkpoint) restarts at a level boundary.
+    """
+    t_start = time.perf_counter()
+    table = prep.table
+    tau, kmax = config.tau, config.kmax
+    n = table.n_rows
+    do_intersect = intersect_fn or (
+        lambda bits, pairs, write_children: intersect_and_count(
+            bits,
+            pairs,
+            write_children=write_children,
+            engine=config.engine,
+            interpret=config.interpret,
+            indexed=config.indexed_kernel,
+        )
+    )
+
+    results: list[tuple[tuple[int, ...], int]] = []
+    stats: list[LevelStats] = []
+
+    # k = 1: emit τ-infrequent singletons (line 5) with mirror-free expansion
+    # (every item, duplicate or not, is kept in the item table, so the
+    # infrequent singletons are already complete).
+    for it in prep.infrequent_items:
+        results.append(((int(it),), int(table.freq[it])))
+    s1 = LevelStats(k=1, emitted=len(prep.infrequent_items), stored=prep.n_l)
+    s1.level_bytes = prep.l_bits.nbytes
+    stats.append(s1)
+
+    # level 1 of the prefix tree over L^< (line 8)
+    level = Level(
+        k=1,
+        itemsets=np.arange(prep.n_l, dtype=np.int32)[:, None],
+        counts=prep.l_freq.copy(),
+        bits=prep.l_bits,
+    )
+    grandparent_index: ItemsetIndex | None = None
+    level_index = ItemsetIndex(level.itemsets, level.counts, n_symbols=prep.n_l)
+    k = 2
+
+    if resume_state is not None:
+        results = list(resume_state["results"])
+        stats = list(resume_state["stats"])
+        level = resume_state["level"]
+        grandparent_index = resume_state.get("grandparent_index")
+        level_index = ItemsetIndex(level.itemsets, level.counts, n_symbols=prep.n_l)
+        k = resume_state["next_k"]
+
+    while k <= kmax and level.t >= 2:
+        ls = LevelStats(k=k)
+        lt0 = time.perf_counter()
+        write_children = k < kmax
+
+        # level streaming (paper §6.1): candidates are generated, tested and
+        # intersected in prefix-group batches bounded by a pair budget that
+        # also caps the intersection working set (child bitsets + gathered
+        # operands ≈ 3 * batch * W * 4 bytes). A whole level's join is never
+        # materialised at once — this is what lets the miner run the paper's
+        # million-row datasets in bounded host memory.
+        n_words = prep.l_bits.shape[1]
+        batch_cap = max(4096, (1 << 28) // max(n_words, 1))
+        batch_pairs = min(config.max_pairs_per_chunk, batch_cap)
+
+        new_itemsets, new_counts, new_bits = [], [], []
+        for cand in iter_candidate_batches(level, batch_pairs):
+            ls.candidates += cand.m
+
+            ok = support_test(cand.itemsets, level_index)
+            ls.support_pruned += int((~ok).sum())
+
+            if k == kmax and config.use_bounds and ok.any():
+                alive_idx = np.nonzero(ok)[0]
+                sub = CandidateBatch(
+                    i_idx=cand.i_idx[alive_idx],
+                    j_idx=cand.j_idx[alive_idx],
+                    itemsets=cand.itemsets[alive_idx],
+                )
+                pruned = apply_bounds(sub, level, level_index, grandparent_index, n, tau)
+                ls.bound_pruned += int(pruned.sum())
+                ok[alive_idx[pruned]] = False
+
+            sel = np.nonzero(ok)[0]
+            ls.intersections += len(sel)
+            if len(sel) == 0:
+                continue
+            pairs = np.stack([cand.i_idx[sel], cand.j_idx[sel]], axis=1).astype(np.int32)
+            it0 = time.perf_counter()
+            child, counts = do_intersect(level.bits, pairs, write_children)
+            ls.time_intersect += time.perf_counter() - it0
+
+            ci = level.counts[pairs[:, 0]]
+            cj = level.counts[pairs[:, 1]]
+            minp = np.minimum(ci, cj)
+            absent_uniform = (counts == 0) | (counts == minp)
+            infrequent = (~absent_uniform) & (counts <= tau)
+            store = (~absent_uniform) & (~infrequent)
+            ls.skipped_absent_uniform += int(absent_uniform.sum())
+
+            inf_rows = np.nonzero(infrequent)[0]
+            if len(inf_rows):
+                # vectorised emission: one gather for all found itemsets;
+                # the per-item mirror expansion only runs for itemsets that
+                # actually touch a duplicate-rowset item (rare).
+                ids_mat = prep.l_items[cand.itemsets[sel[inf_rows]]]  # (r, k)
+                ids_mat = np.sort(ids_mat, axis=1)  # canonical ascending ids
+                cnts = counts[inf_rows]
+                if prep.mirror_of:
+                    mirror_items = np.fromiter(prep.mirror_of.keys(), dtype=np.int64)
+                    has_mirror = np.isin(ids_mat, mirror_items).any(axis=1)
+                else:
+                    has_mirror = np.zeros(len(inf_rows), dtype=bool)
+                plain = ~has_mirror
+                results.extend(
+                    zip(map(tuple, ids_mat[plain].tolist()), cnts[plain].tolist())
+                )
+                for r in np.nonzero(has_mirror)[0]:
+                    results.extend(
+                        _expand_mirrors(tuple(ids_mat[r].tolist()), int(cnts[r]),
+                                        prep.mirror_of, config.expansion)
+                    )
+                ls.emitted += len(inf_rows)
+
+            if write_children and store.any():
+                rows = np.nonzero(store)[0]
+                new_itemsets.append(cand.itemsets[sel[rows]])
+                new_counts.append(counts[rows])
+                new_bits.append(child[rows])
+
+        if write_children and new_itemsets:
+            nxt_itemsets = np.concatenate(new_itemsets, axis=0)
+            nxt_counts = np.concatenate(new_counts, axis=0)
+            nxt_bits = np.concatenate(new_bits, axis=0)
+        else:
+            nxt_itemsets = np.zeros((0, k), dtype=np.int32)
+            nxt_counts = np.zeros(0, dtype=np.int64)
+            nxt_bits = np.zeros((0, prep.l_bits.shape[1]), dtype=np.uint32)
+
+        ls.stored = nxt_itemsets.shape[0]
+        ls.level_bytes = nxt_bits.nbytes + (level.bits.nbytes if level.bits is not None else 0)
+        ls.time_total = time.perf_counter() - lt0
+        stats.append(ls)
+
+        grandparent_index = level_index
+        level = Level(k=k, itemsets=nxt_itemsets, counts=nxt_counts, bits=nxt_bits)
+        level_index = ItemsetIndex(level.itemsets, level.counts, n_symbols=prep.n_l)
+        k += 1
+
+        if on_level_end is not None:
+            on_level_end(
+                k - 1,
+                {
+                    "results": results,
+                    "stats": stats,
+                    "level": level,
+                    "grandparent_index": grandparent_index,
+                    "next_k": k,
+                },
+            )
+
+    return MiningResult(
+        itemsets=results,
+        stats=stats,
+        prep=prep,
+        config=config,
+        wall_time=time.perf_counter() - t_start,
+    )
+
+
+def mine(dataset: np.ndarray, config: KyivConfig | None = None, **kw) -> MiningResult:
+    """End-to-end: itemize -> preprocess (§4.1) -> Algorithm 1."""
+    if config is None:
+        config = KyivConfig(**kw)
+    elif kw:
+        config = dataclasses.replace(config, **kw)
+    table = itemize(dataset)
+    prep = preprocess(table, config.tau, ordering=config.ordering, seed=config.seed)
+    return mine_preprocessed(prep, config)

@@ -1,0 +1,42 @@
+"""Elastic re-partitioning: resume work on a different mesh than it was
+checkpointed from.
+
+Checkpoints store *logical* (full) arrays (see ``checkpoint.py``), so
+elasticity reduces to re-distributing on load: ``redistribute`` places a
+restored pytree onto a new mesh with the plan's shardings; for the miner,
+``rebalance_pairs`` re-blocks the pair stream to the new shard count at the
+next level boundary. A node-failure drill (kill -> restart on a smaller
+mesh -> identical results) is exercised in tests/test_elastic.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import Plan
+
+__all__ = ["redistribute", "mesh_fingerprint"]
+
+
+def mesh_fingerprint(mesh) -> dict:
+    return {"shape": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "n_devices": int(mesh.devices.size)}
+
+
+def redistribute(tree, plan: Plan, kind: str = "params"):
+    """Place a host/logical pytree onto ``plan.mesh`` with planner shardings.
+
+    kind: params | batch | cache — selects the planner rule family.
+    """
+    if kind == "params":
+        shardings = plan.param_shardings(jax.tree.map(jnp.asarray, tree))
+    elif kind == "batch":
+        shardings = plan.batch_shardings(jax.tree.map(jnp.asarray, tree))
+    elif kind == "cache":
+        shardings = plan.cache_shardings(jax.tree.map(jnp.asarray, tree))
+    else:
+        raise ValueError(kind)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(jnp.asarray(a), s), tree, shardings
+    )

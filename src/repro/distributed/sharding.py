@@ -1,0 +1,231 @@
+"""Sharding planner: maps every parameter / batch / cache leaf to a
+PartitionSpec given the mesh, with per-dim divisibility fallback.
+
+Logical rules (MaxText-style, adapted to this zoo's param naming):
+
+  * "in" matrices  (D, X)  — wq wk wv w_gate w_up w_in router w_dkv sh_* w_a
+    w_x lm_head:            P(fsdp, tp)   (X = heads*hd / ff / vocab ...)
+  * "out" matrices (X, D)  — wo w_out w_down sh_down w_uk w_uv:
+                             P(tp, fsdp)
+  * embedding (V, D):       P(tp, fsdp)   (vocab on tensor axis)
+  * expert tensors (E, D, F) / (E, F, D): expert dim on tp (EP), D on fsdp
+  * 1-D biases (X,):        P(tp);  norms / scalars: replicated
+  * conv (K, C):            P(None, tp)
+  * stacked layer params (leading n_groups / n_layers dim): same rule with a
+    leading None.
+
+``fsdp`` = the data axes (ZeRO-style weight sharding over DP); any dim not
+divisible by its assigned axes falls back to replicated for that dim — the
+planner records these fallbacks so the dry-run can report them.
+
+Batch: leading batch dim over dp. Caches: KV-head dim on tp when divisible,
+else head_dim on tp, else sequence on tp (the fallback chain keeps big decode
+caches distributed even when n_kv < |tp|, e.g. MQA).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from ..models.layers.common import ShardCtx
+
+__all__ = ["Plan", "make_plan"]
+
+_IN_MATS = {
+    "wq", "wk", "wv", "w_gate", "w_up", "w_in", "router", "w_dkv",
+    "sh_gate", "sh_up", "w_a", "w_x", "lm_head",
+}
+_OUT_MATS = {"wo", "w_out", "w_down", "sh_down", "w_uk", "w_uv"}
+_STACKED_MARKERS = {"groups", "enc_layers", "dec_layers"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            names.append(f"[{k.idx}]")
+        else:
+            names.append(str(k))
+    return names
+
+
+@dataclasses.dataclass
+class Plan:
+    mesh: Mesh
+    dp: tuple[str, ...]
+    tp: str
+    fallbacks: list[str] = dataclasses.field(default_factory=list)
+    # serve mode: weights are inference-only (bf16, no optimizer state), so
+    # the FSDP dim is dropped (dp -> replicated) whenever the model fits —
+    # removing the per-step weight all-gathers that otherwise dominate the
+    # decode collective term (EXPERIMENTS.md §Perf, recurrentgemma decode).
+    serve: bool = False
+
+    # -- helpers -----------------------------------------------------------
+    def _size(self, axes) -> int:
+        if axes is None:
+            return 1
+        axes = (axes,) if isinstance(axes, str) else axes
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def _fit(self, dim: int, axes, leaf: str, dim_idx: int):
+        if axes is None:
+            return None
+        if dim % self._size(axes) == 0:
+            return axes
+        self.fallbacks.append(f"{leaf}[dim{dim_idx}]={dim} !% {axes}")
+        return None
+
+    def ctx(self) -> ShardCtx:
+        return ShardCtx(mesh=self.mesh, dp=self.dp, tp=self.tp)
+
+    # -- parameters --------------------------------------------------------
+    def param_spec(self, path, leaf) -> P:
+        names = _path_names(path)
+        name = names[-1]
+        stacked = any(m in names for m in _STACKED_MARKERS)
+        shape = leaf.shape
+        core = shape[1:] if stacked else shape
+        spec = self._param_core_spec(name, core)
+        if stacked:
+            spec = (None,) + spec
+        return P(*spec)
+
+    def _param_core_spec(self, name: str, shape) -> tuple:
+        nd = len(shape)
+        lbl = name
+        if self.serve:
+            spec = self._param_core_spec_train(name, shape)
+            return tuple(None if s == self.dp or s == tuple(self.dp) else s for s in spec)
+        return self._param_core_spec_train(name, shape)
+
+    def _param_core_spec_train(self, name: str, shape) -> tuple:
+        nd = len(shape)
+        lbl = name
+        if nd == 0:
+            return ()
+        if nd == 1:
+            if name in ("norm1", "norm2", "norm_x", "final_norm", "enc_norm",
+                        "kv_norm", "gate_norm", "lam", "A_log", "D", "dt_bias",
+                        "b_a", "b_x"):
+                return (None,)
+            return (self._fit(shape[0], self.tp, lbl, 0),)
+        if nd == 2:
+            if name == "embedding":  # (V, D)
+                return (
+                    self._fit(shape[0], self.tp, lbl, 0),
+                    self._fit(shape[1], self.dp, lbl, 1),
+                )
+            if name == "conv_w":  # (K, C)
+                return (None, self._fit(shape[1], self.tp, lbl, 1))
+            if name in _OUT_MATS:  # (X, D)
+                return (
+                    self._fit(shape[0], self.tp, lbl, 0),
+                    self._fit(shape[1], self.dp, lbl, 1),
+                )
+            # default "in" matrix (D, X)
+            return (
+                self._fit(shape[0], self.dp, lbl, 0),
+                self._fit(shape[1], self.tp, lbl, 1),
+            )
+        if nd == 3:  # experts (E, D, F) or (E, F, D)
+            if name in _OUT_MATS:
+                return (
+                    self._fit(shape[0], self.tp, lbl, 0),
+                    None,
+                    self._fit(shape[2], self.dp, lbl, 2),
+                )
+            return (
+                self._fit(shape[0], self.tp, lbl, 0),
+                self._fit(shape[1], self.dp, lbl, 1),
+                None,
+            )
+        return tuple([None] * nd)
+
+    def param_shardings(self, abstract_params):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(self.mesh, self.param_spec(p, l)),
+            abstract_params,
+        )
+
+    # -- batches -----------------------------------------------------------
+    def batch_spec(self, path, leaf) -> P:
+        shape = leaf.shape
+        lbl = _path_names(path)[-1]
+        first = self._fit(shape[0], self.dp, lbl, 0)
+        return P(*((first,) + (None,) * (len(shape) - 1)))
+
+    def batch_shardings(self, abstract_batch):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(self.mesh, self.batch_spec(p, l)),
+            abstract_batch,
+        )
+
+    # -- caches ------------------------------------------------------------
+    def cache_spec(self, path, leaf) -> P:
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        # stacked (leading layer dim) is detected by rank: each state kind has
+        # a fixed core rank; +1 means a stacked layer axis (scan layout).
+        core_rank = {"k": 4, "v": 4, "c_kv": 3, "k_rope": 3, "state": 4,
+                     "h": 2, "conv": 3}.get(name, len(shape))
+        stacked = len(shape) == core_rank + 1
+        core = shape[1:] if stacked else shape
+        spec: list = []
+        if name in ("k", "v"):  # (B, L, KV, hd)
+            b, L, kv, hd = core
+            spec = [self._fit(b, self.dp, name, 0), None, None, None]
+            if kv % self._size(self.tp) == 0:
+                spec[2] = self.tp
+            elif hd % self._size(self.tp) == 0:
+                spec[3] = self.tp
+            elif L % self._size(self.tp) == 0:
+                spec[1] = self.tp  # sequence-sharded KV (MQA / long context)
+        elif name in ("c_kv", "k_rope"):  # (B, L, R)
+            b, L, r = core
+            spec = [self._fit(b, self.dp, name, 0), None, self._fit(r, self.tp, name, 2)]
+            if spec[2] is None and L % self._size(self.tp) == 0:
+                spec[1] = self.tp
+        elif name == "state":  # ssd (B, H, P, N)
+            b, h, pdim, n = core
+            spec = [self._fit(b, self.dp, name, 0), self._fit(h, self.tp, name, 1), None, None]
+        elif name == "h":  # rglru (B, R)
+            b, r = core
+            spec = [self._fit(b, self.dp, name, 0), self._fit(r, self.tp, name, 1)]
+        elif name == "conv":  # (B, K-1, C)
+            b, kk, c = core
+            spec = [self._fit(b, self.dp, name, 0), None, self._fit(c, self.tp, name, 2)]
+        else:
+            spec = [self._fit(core[0], self.dp, name, 0)] + [None] * (len(core) - 1)
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    def cache_shardings(self, abstract_cache):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(self.mesh, self.cache_spec(p, l)),
+            abstract_cache,
+        )
+
+    def replicated(self):
+        return NamedSharding(self.mesh, P())
+
+
+def make_plan(mesh: Mesh, multi_pod: bool | None = None, serve: bool = False) -> Plan:
+    """Build the plan from mesh axis names ((pod,)data,model)."""
+    names = mesh.axis_names
+    if "model" not in names:
+        raise ValueError(f"mesh must have a 'model' axis, got {names}")
+    dp = tuple(a for a in names if a != "model")
+    return Plan(mesh=mesh, dp=dp, tp="model", serve=serve)

@@ -1,0 +1,27 @@
+from .intersect import (
+    intersect_count_gathered,
+    intersect_count_indexed,
+    intersect_write_gathered,
+    intersect_write_indexed,
+)
+from .ops import ENGINES, intersect_and_count, next_bucket
+from .ref import (
+    intersect_count_ref,
+    intersect_gathered_ref,
+    intersect_pairs_ref,
+    popcount_rows_ref,
+)
+
+__all__ = [
+    "intersect_count_gathered",
+    "intersect_count_indexed",
+    "intersect_write_gathered",
+    "intersect_write_indexed",
+    "ENGINES",
+    "intersect_and_count",
+    "next_bucket",
+    "intersect_count_ref",
+    "intersect_gathered_ref",
+    "intersect_pairs_ref",
+    "popcount_rows_ref",
+]

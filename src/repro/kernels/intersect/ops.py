@@ -1,0 +1,143 @@
+"""Jit'd public wrappers around the intersection kernels, with engine selection
+and bucket padding.
+
+The mining driver calls :func:`intersect_and_count` with ragged pair lists;
+this module pads to shape buckets (so device executables are reused across
+levels), dispatches to one of the engines and strips padding:
+
+* ``numpy``  — host vectorised ``np.bitwise_and`` + ``np.bitwise_count``;
+  fastest on this CPU-only container, used by the wall-clock benchmarks.
+* ``jnp``    — the jnp oracle under jit (XLA CPU/TPU).
+* ``pallas`` — the Pallas kernels (``interpret=True`` on CPU; compiled on TPU).
+
+Padding contract: pair index rows added for padding point at row 0 twice; the
+returned arrays are sliced back to the true count, so callers never observe
+padding.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import intersect as _k
+from . import ref as _ref
+
+__all__ = ["intersect_and_count", "next_bucket", "ENGINES"]
+
+ENGINES = ("numpy", "jnp", "pallas")
+
+_MIN_BUCKET = 256
+
+
+def next_bucket(m: int, minimum: int = _MIN_BUCKET) -> int:
+    """Smallest power-of-two bucket >= m (>= minimum) — bounds executable count."""
+    b = minimum
+    while b < m:
+        b <<= 1
+    return b
+
+
+def _pad_pairs(pairs: np.ndarray, bucket: int) -> np.ndarray:
+    m = pairs.shape[0]
+    if m == bucket:
+        return pairs
+    out = np.zeros((bucket, 2), dtype=pairs.dtype)
+    out[:m] = pairs
+    return out
+
+
+def intersect_and_count(
+    bits,
+    pairs: np.ndarray,
+    *,
+    write_children: bool,
+    engine: str = "numpy",
+    interpret: bool = True,
+    indexed: bool = True,
+    block_pairs: int = 8,
+    block_words: int = 512,
+    pad_buckets: bool = True,
+):
+    """Compute ``child = bits[i] & bits[j]`` and/or ``counts = |child|``.
+
+    Args:
+      bits: (t, W) uint32 parent bitsets (numpy or jax array).
+      pairs: (M, 2) integer row indices.
+      write_children: False selects the count-only k=k_max path.
+      engine: one of ``numpy`` / ``jnp`` / ``pallas``.
+      interpret: Pallas interpret mode (True on CPU).
+      indexed: Pallas path — scalar-prefetch gather (True) vs pre-gathered.
+    Returns:
+      (child (M, W) uint32 | None, counts (M,) int64 numpy array)
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    m = int(pairs.shape[0])
+    if m == 0:
+        W = bits.shape[1]
+        empty = np.zeros((0, W), dtype=np.uint32) if write_children else None
+        return empty, np.zeros(0, dtype=np.int64)
+
+    if engine == "numpy":
+        bits_np = np.asarray(bits)
+        a = bits_np[pairs[:, 0]]
+        b = bits_np[pairs[:, 1]]
+        child = np.bitwise_and(a, b)
+        counts = np.bitwise_count(child).sum(axis=1).astype(np.int64)
+        return (child if write_children else None), counts
+
+    pairs = np.asarray(pairs, dtype=np.int32)
+    bucket = next_bucket(m) if pad_buckets else m
+    padded = _pad_pairs(pairs, bucket)
+    bits_j = jnp.asarray(bits)
+    pairs_j = jnp.asarray(padded)
+
+    if engine == "jnp":
+        if write_children:
+            child, cnt = jax.jit(_ref.intersect_pairs_ref)(bits_j, pairs_j)
+        else:
+            child, cnt = None, jax.jit(_ref.intersect_count_ref)(bits_j, pairs_j)
+    else:  # pallas
+        W = bits_j.shape[1]
+        bw = _largest_divisor_tile(W, block_words)
+        if indexed:
+            if write_children:
+                child, cnt = _k.intersect_write_indexed(
+                    bits_j, pairs_j, block_words=bw, interpret=interpret
+                )
+            else:
+                child = None
+                cnt = _k.intersect_count_indexed(
+                    bits_j, pairs_j, block_words=bw, interpret=interpret
+                )
+        else:
+            a = bits_j[pairs_j[:, 0]]
+            b = bits_j[pairs_j[:, 1]]
+            bm = _largest_divisor_tile(bucket, block_pairs)
+            if write_children:
+                child, cnt = _k.intersect_write_gathered(
+                    a, b, block_pairs=bm, block_words=bw, interpret=interpret
+                )
+            else:
+                child = None
+                cnt = _k.intersect_count_gathered(
+                    a, b, block_pairs=bm, block_words=bw, interpret=interpret
+                )
+
+    counts = np.asarray(cnt)[:m].astype(np.int64)
+    child_np = None
+    if write_children:
+        child_np = np.asarray(child)[:m]
+    return child_np, counts
+
+
+def _largest_divisor_tile(dim: int, preferred: int) -> int:
+    """Largest tile <= preferred that divides dim (dims here are powers of two
+    times small factors; fall back to scanning)."""
+    tile = min(preferred, dim)
+    while dim % tile:
+        tile -= 1
+    return max(tile, 1)

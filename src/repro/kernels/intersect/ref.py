@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the bitset intersection kernels.
+
+``R_W = R_I ∩ R_J`` on bitset rows is a bitwise AND; ``|R_W|`` is a popcount
+reduce. These references define the exact semantics the Pallas kernels must
+reproduce (tests sweep shapes/dtypes and assert exact equality — the op is
+integer, so tolerance is zero).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "intersect_pairs_ref",
+    "intersect_count_ref",
+    "intersect_gathered_ref",
+    "popcount_rows_ref",
+]
+
+
+def popcount_rows_ref(bits: jax.Array) -> jax.Array:
+    """(t, W) uint bitsets -> (t,) int32 population counts."""
+    return jnp.sum(jax.lax.population_count(bits).astype(jnp.int32), axis=-1)
+
+
+def intersect_gathered_ref(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """AND + popcount of two aligned (M, W) bitset matrices."""
+    child = jnp.bitwise_and(a, b)
+    return child, popcount_rows_ref(child)
+
+
+def intersect_pairs_ref(bits: jax.Array, pairs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Gather rows ``pairs[:, 0]``/``pairs[:, 1]`` of (t, W) ``bits``, AND, popcount.
+
+    Returns (child_bits (M, W), counts (M,) int32).
+    """
+    a = bits[pairs[:, 0]]
+    b = bits[pairs[:, 1]]
+    return intersect_gathered_ref(a, b)
+
+
+def intersect_count_ref(bits: jax.Array, pairs: jax.Array) -> jax.Array:
+    """Count-only variant (k = k_max path): no child bitset is produced."""
+    a = bits[pairs[:, 0]]
+    b = bits[pairs[:, 1]]
+    return popcount_rows_ref(jnp.bitwise_and(a, b))

@@ -1,0 +1,35 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state. Single-pod: 16x16 = 256
+chips, axes (data, model). Multi-pod: 2 pods x 256 = 512 chips with a leading
+"pod" axis — the pod axis extends data parallelism across the inter-pod
+links (DCN in practice; the dry-run proves the sharding is coherent).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 4, model: int = 2) -> jax.sharding.Mesh:
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    n = len(jax.devices())
+    if data * model > n:
+        data, model = max(1, n // 2), min(2, n) if n > 1 else 1
+        if data * model > n:
+            data, model = n, 1
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,229 @@
+"""Encoder-decoder transformer (Whisper-style, arXiv:2212.04356).
+
+Encoder: non-causal attention over (stubbed) audio-frame embeddings, scan
+over stacked layers. Decoder: causal self-attention + cross-attention into
+the encoder memory + MLP, scan over stacked layers. The conv frontend is a
+stub per the assignment — ``input_specs`` supplies frame embeddings already
+at ``d_model``.
+
+Decode caches: per decoder layer, self-attn KV cache plus the (static)
+cross-attn K/V projected from the encoder memory once at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers.attention import chunked_attention, decode_attention
+from .layers.common import ShardCtx, dense_init, rms_norm, shard
+from .layers.embeddings import chunked_xent, embed_tokens, init_embed, logits_head
+from .layers.mlp import apply_mlp, init_mlp
+from .layers.rope import apply_rope
+
+__all__ = [
+    "init_encdec",
+    "encdec_train_loss",
+    "encdec_encode",
+    "encdec_prefill",
+    "encdec_decode",
+    "init_encdec_cache",
+]
+
+
+def _init_attn(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, kv * hd)),
+        "wv": dense_init(ks[2], (d, kv * hd)),
+        "wo": dense_init(ks[3], (h * hd, d)),
+    }
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": _init_attn(ks[0], cfg),
+        "norm2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "self_attn": _init_attn(ks[0], cfg),
+        "norm_x": jnp.zeros((cfg.d_model,), jnp.float32),
+        "cross_attn": _init_attn(ks[1], cfg),
+        "norm2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_act),
+    }
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_encdec(key, cfg: ArchConfig) -> dict:
+    ke, kd, kemb = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": init_embed(kemb, cfg.vocab, cfg.d_model, cfg.tie_embeddings),
+        "enc_layers": _stack([_init_enc_layer(k, cfg) for k in enc_keys]),
+        "dec_layers": _stack([_init_dec_layer(k, cfg) for k in dec_keys]),
+        "enc_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def _qkv(p, x, cfg, ctx, rope_positions=None):
+    b, s, _ = x.shape
+    dt = x.dtype
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, kv, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, kv, hd)
+    if rope_positions is not None:
+        q = apply_rope(q, rope_positions, cfg.rope_theta)
+        k = apply_rope(k, rope_positions, cfg.rope_theta)
+    q = shard(ctx, q, ("dp", None, "tp", None))
+    k = shard(ctx, k, ("dp", None, "tp", None))
+    return q, k, v
+
+
+def encdec_encode(params, cfg: ArchConfig, ctx, frames: jax.Array) -> jax.Array:
+    """frames (B, S_enc, D) -> encoder memory (B, S_enc, D)."""
+    x = shard(ctx, frames, ("dp", None, None))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(xc, lp):
+        h = rms_norm(xc, lp["norm1"])
+        q, k, v = _qkv(lp["attn"], h, cfg, ctx, positions)
+        o = chunked_attention(q, k, v, causal=False)
+        o = o.reshape(b, s, -1) @ lp["attn"]["wo"].astype(xc.dtype)
+        xc = xc + o
+        h2 = rms_norm(xc, lp["norm2"])
+        xc = xc + apply_mlp(lp["mlp"], h2, cfg.mlp_act, ctx)
+        return shard(ctx, xc, ("dp", None, None)), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def _dec_layer(lp, cfg, ctx, x, memory, mode, state, lengths):
+    b, s, _ = x.shape
+    dt = x.dtype
+    h_heads, hd = cfg.n_heads, cfg.head_dim
+    # self attention
+    h = rms_norm(x, lp["norm1"])
+    if mode in ("train", "prefill"):
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        q, k, v = _qkv(lp["self_attn"], h, cfg, ctx, positions)
+        o = chunked_attention(q, k, v, causal=True)
+        new_self = {"k": k, "v": v} if mode == "prefill" else None
+    else:
+        positions = lengths[:, None]
+        q, k, v = _qkv(lp["self_attn"], h, cfg, ctx, positions)
+        L = state["k"].shape[1]
+        bi = jnp.arange(b)
+        idx = jnp.minimum(lengths, L - 1)
+        k_cache = state["k"].at[bi, idx].set(k[:, 0])
+        v_cache = state["v"].at[bi, idx].set(v[:, 0])
+        o = decode_attention(q, k_cache, v_cache, lengths + 1)
+        new_self = {"k": k_cache, "v": v_cache}
+    x = x + o.reshape(b, s, -1) @ lp["self_attn"]["wo"].astype(dt)
+
+    # cross attention (memory: either raw encoder states or cached K/V)
+    hx = rms_norm(x, lp["norm_x"])
+    qx = (hx @ lp["cross_attn"]["wq"].astype(dt)).reshape(b, s, h_heads, hd)
+    if isinstance(memory, dict):  # pre-projected cache
+        km, vm = memory["k"], memory["v"]
+    else:
+        mb, ms, _ = memory.shape
+        km = (memory @ lp["cross_attn"]["wk"].astype(dt)).reshape(mb, ms, cfg.n_kv_heads, hd)
+        vm = (memory @ lp["cross_attn"]["wv"].astype(dt)).reshape(mb, ms, cfg.n_kv_heads, hd)
+    ox = chunked_attention(qx, km, vm, causal=False)
+    x = x + ox.reshape(b, s, -1) @ lp["cross_attn"]["wo"].astype(dt)
+
+    h2 = rms_norm(x, lp["norm2"])
+    x = x + apply_mlp(lp["mlp"], h2, cfg.mlp_act, ctx)
+    x = shard(ctx, x, ("dp", None, None))
+    new_cross = {"k": km, "v": vm} if mode == "prefill" else None
+    return x, new_self, new_cross
+
+
+def _run_decoder(params, cfg, ctx, x, memory, mode, cache, lengths):
+    def body(xc, xs):
+        lp, st, mem = xs
+        xc, new_self, new_cross = _dec_layer(lp, cfg, ctx, xc, mem, mode, st, lengths)
+        return xc, (new_self, new_cross)
+
+    n_layers = cfg.n_layers
+    if cache is not None:
+        states_xs = cache["self"]
+        mems = cache["cross"]
+    else:
+        states_xs = None  # empty pytree: _dec_layer sees st=None in train/prefill
+        mems = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_layers,) + a.shape), memory
+        )
+    body_fn = jax.checkpoint(body) if mode == "train" else body
+    x, (new_self, new_cross) = jax.lax.scan(
+        body_fn, x, (params["dec_layers"], states_xs, mems)
+    )
+    return x, new_self, new_cross
+
+
+def encdec_train_loss(params, cfg, ctx, frames, tokens, labels):
+    memory = encdec_encode(params, cfg, ctx, frames)
+    dt = memory.dtype
+    x = embed_tokens(params["embed"], tokens, dt) * jnp.asarray(cfg.d_model**0.5, dt)
+    x = shard(ctx, x, ("dp", None, None))
+    x, _, _ = _run_decoder(params, cfg, ctx, x, memory, "train", None, None)
+    x = rms_norm(x, params["final_norm"])
+    return chunked_xent(params["embed"], x, labels, ctx)
+
+
+def encdec_prefill(params, cfg, ctx, frames, tokens):
+    """Encode + decoder prefill; returns (last logits, cache)."""
+    memory = encdec_encode(params, cfg, ctx, frames)
+    dt = memory.dtype
+    x = embed_tokens(params["embed"], tokens, dt) * jnp.asarray(cfg.d_model**0.5, dt)
+    x, new_self, new_cross = _run_decoder(params, cfg, ctx, x, memory, "prefill", None, None)
+    x = rms_norm(x, params["final_norm"])
+    logits = logits_head(params["embed"], x[:, -1:], ctx)
+    return logits, {"self": new_self, "cross": new_cross}
+
+
+def encdec_decode(params, cfg, ctx, tokens, positions, cache):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = embed_tokens(params["embed"], tokens, dt) * jnp.asarray(cfg.d_model**0.5, dt)
+    x, new_self, new_cross = _run_decoder(
+        params, cfg, ctx, x, None, "decode", cache, positions
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = logits_head(params["embed"], x, ctx)
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, max_len: int, abstract: bool = False):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    S = jax.ShapeDtypeStruct
+    kvshape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    xshape = (cfg.n_layers, batch, cfg.cross_attn_len, cfg.n_kv_heads, cfg.head_dim)
+    cache = {
+        "self": {"k": S(kvshape, dt), "v": S(kvshape, dt)},
+        "cross": {"k": S(xshape, dt), "v": S(xshape, dt)},
+    }
+    if not abstract:
+        cache = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), cache)
+    return cache

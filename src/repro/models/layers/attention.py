@@ -1,0 +1,203 @@
+"""Memory-efficient attention cores (pure JAX, scan-based).
+
+Three paths, all GQA-aware (query heads grouped over KV heads):
+
+* :func:`chunked_attention` — online-softmax double scan over (q blocks ×
+  kv blocks); never materialises an (S, S) score matrix. Used for train and
+  prefill of *global* layers. Causal masking is block-exact: strictly-upper
+  blocks are skipped arithmetically (their contribution multiplies to zero)
+  — FLOP waste relative to a triangular schedule is a known §Perf item.
+
+* :func:`local_attention` — sliding-window attention computed per q-block
+  against a static window of kv blocks gathered with ``dynamic_slice``; cost
+  is O(S · window), genuinely sub-quadratic (gemma3 local layers,
+  recurrentgemma local layers, long-context serving).
+
+* :func:`decode_attention` — single-query attention against a KV cache with
+  explicit length masking (and window masking for local layers).
+
+Accumulation is float32 regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_attention", "local_attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, S, H, hd) -> (B, S, KV, G, hd) with H = KV * G."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = 1024,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention. q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd)."""
+    b, sq, h, hd = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    scale = hd ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pad_q = (-sq) % bq
+    pad_k = (-skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    nq, nk = qp.shape[1] // bq, kp.shape[1] // bk
+
+    qg = _group(qp, n_kv)  # (B, Sq, KV, G, hd)
+    g = qg.shape[3]
+    qb = qg.reshape(b, nq, bq, n_kv, g, hd)
+    kb = kp.reshape(b, nk, bk, n_kv, hd)
+    vb = vp.reshape(b, nk, bk, n_kv, hdv)
+
+    q_pos_base = jnp.arange(bq)
+    k_pos_base = jnp.arange(bk)
+
+    def q_block(qi, q_blk):
+        # q_blk: (B, bq, KV, G, hd)
+        acc0 = jnp.zeros((b, bq, n_kv, g, hdv), jnp.float32)
+        m0 = jnp.full((b, bq, n_kv, g), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, bq, n_kv, g), jnp.float32)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            k_blk = jax.lax.dynamic_index_in_dim(kb, ki, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vb, ki, 1, keepdims=False)
+            s = jnp.einsum(
+                "bqkgd,bckd->bqkgc", q_blk.astype(jnp.float32), k_blk.astype(jnp.float32)
+            ) * scale  # (B, bq, KV, G, bk)
+            qpos = q_offset + qi * bq + q_pos_base  # (bq,)
+            kpos = ki * bk + k_pos_base  # (bk,)
+            mask = kpos[None, :] <= qpos[:, None] if causal else jnp.ones((bq, bk), bool)
+            mask = mask & (kpos[None, :] < skv)  # kv padding
+            s = jnp.where(mask[None, :, None, None, :], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, v_blk.astype(jnp.float32)
+            )
+            l = l * alpha + p.sum(axis=-1)
+            return (acc, m_new, l), None
+
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), jnp.arange(nk))
+        return acc / jnp.maximum(l[..., None], 1e-37)
+
+    out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qb.swapaxes(0, 1)))
+    # out: (nq, B, bq, KV, G, hd) -> (B, Sq, H, hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * bq, h, hdv)
+    return out[:, :sq].astype(q.dtype)
+
+
+def local_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    q_offset: int = 0,
+    block: int | None = None,
+) -> jax.Array:
+    """Sliding-window causal attention, O(S * window).
+
+    Each q block attends to the kv blocks covering [pos - window + 1, pos].
+    """
+    b, sq, h, hd = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    scale = hd ** -0.5
+    blk = block or min(max(window // 2, 128), 1024)
+    blk = min(blk, sq)
+    pad_q = (-sq) % blk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    nq = qp.shape[1] // blk
+    # kv span per q block: window + blk rounded up to blocks
+    span = ((window + blk - 1) // blk + 1) * blk
+    # left-pad by span (so the first block's slice is in range) and right-pad
+    # by pad_q (so padded q blocks never force dynamic_slice clamping, which
+    # would silently shift positions).
+    kp = jnp.pad(k, ((0, 0), (span, pad_q), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (span, pad_q), (0, 0), (0, 0)))
+
+    qg = _group(qp, n_kv)
+    g = qg.shape[3]
+    qb = qg.reshape(b, nq, blk, n_kv, g, hd)
+
+    def q_block(qi, q_blk):
+        q_end = q_offset + (qi + 1) * blk  # one past the last absolute q pos
+        # unpadded kv start = q_end - span; +span for the left pad = q_end
+        start = q_end
+        k_span = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        v_span = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        s = jnp.einsum(
+            "bqkgd,bckd->bqkgc", q_blk.astype(jnp.float32), k_span.astype(jnp.float32)
+        ) * scale
+        qpos = q_offset + qi * blk + jnp.arange(blk)  # absolute q positions
+        kpos = (q_end - span) + jnp.arange(span)  # absolute kv positions (may be <0 = pad)
+        valid = (
+            (kpos[None, :] <= qpos[:, None])
+            & (kpos[None, :] > qpos[:, None] - window)
+            & (kpos[None, :] >= 0)
+            & (kpos[None, :] < skv)
+        )
+        s = jnp.where(valid[None, :, None, None, :], s, _NEG)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        o = jnp.einsum("bqkgc,bckd->bqkgd", p, v_span.astype(jnp.float32))
+        return o / jnp.maximum(p.sum(axis=-1)[..., None], 1e-37)
+
+    out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qb.swapaxes(0, 1)))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * blk, h, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: int = 0,
+    ring_offset: jax.Array | None = None,
+) -> jax.Array:
+    """Single-step attention against a cache.
+
+    q: (B, 1, H, hd); k/v_cache: (B, L, KV, hd); lengths: (B,) valid entries
+    (cache positions < lengths are attended). For windowed layers the cache
+    is a ring buffer of size L = window: all L slots are valid once full and
+    recency masking is positional via ``lengths`` only.
+    """
+    b, _, h, hd = q.shape
+    L, n_kv = k_cache.shape[1], k_cache.shape[2]
+    hdv = v_cache.shape[-1]
+    scale = hd ** -0.5
+    qg = _group(q, n_kv)[:, 0]  # (B, KV, G, hd)
+    s = jnp.einsum(
+        "bkgd,blkd->bkgl", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    slot = jnp.arange(L)[None, :]  # (1, L)
+    valid = slot < lengths[:, None]
+    if window:
+        valid = valid & (slot >= lengths[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bkgl,blkd->bkgd", p, v_cache.astype(jnp.float32))
+    o = o / jnp.maximum(p.sum(axis=-1)[..., None], 1e-37)
+    return o.reshape(b, 1, h, hdv).astype(q.dtype)

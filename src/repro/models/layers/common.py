@@ -1,0 +1,89 @@
+"""Shared layer utilities: sharding context, norms, initializers.
+
+``ShardCtx`` carries the logical->mesh axis mapping through the forward pass;
+``shard(ctx, x, names)`` applies ``with_sharding_constraint`` with per-dim
+divisibility fallback (a non-divisible dim silently replicates — the planner
+reports these in the dry-run log). With ``ctx.mesh is None`` everything is a
+no-op, so the same model code runs un-sharded on CPU for smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardCtx", "shard", "rms_norm", "dense_init", "zeros_init", "cast"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Logical sharding context.
+
+    dp: data-parallel mesh axes (e.g. ("data",) or ("pod", "data")).
+    tp: tensor-parallel axis name (e.g. "model") or None.
+    sp: shard sequence dim of block-boundary activations over tp
+        (sequence parallelism; saves activation memory under remat).
+    """
+
+    mesh: Mesh | None = None
+    dp: tuple[str, ...] = ()
+    tp: str | None = None
+    sp: bool = True
+
+    def axis_size(self, logical: str | tuple[str, ...] | None) -> int:
+        if self.mesh is None or logical is None:
+            return 1
+        axes = (logical,) if isinstance(logical, str) else logical
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def resolve(self, name) -> tuple[str, ...] | str | None:
+        if name is None:
+            return None
+        if name == "dp":
+            return self.dp if self.dp else None
+        if name == "tp":
+            return self.tp
+        raise ValueError(f"unknown logical axis {name!r}")
+
+
+def shard(ctx: ShardCtx | None, x: jax.Array, names: tuple) -> jax.Array:
+    """Constrain ``x`` sharding; per-dim divisibility fallback to replicated."""
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = []
+    for dim, name in zip(x.shape, names):
+        axes = ctx.resolve(name)
+        if axes is None or dim % ctx.axis_size(axes) != 0:
+            spec.append(None)
+        else:
+            spec.append(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init (LeCun-ish), fp32 master weights."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def zeros_init(shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def cast(x: jax.Array, dtype_str: str) -> jax.Array:
+    return x.astype(jnp.bfloat16 if dtype_str == "bfloat16" else jnp.float32)

@@ -1,0 +1,89 @@
+"""Token embedding and the chunked softmax cross-entropy head.
+
+At production shapes the full (B, S, V) logits tensor does not fit
+(16 × 4096 × 152k bf16 ≈ 20 GB per device) — the loss is computed by a
+``lax.scan`` over sequence chunks: per chunk, logits -> logsumexp -> label
+logit, accumulating scalar loss; the full logits never materialise. The
+vocab dim of each chunk shards over the tensor axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardCtx, dense_init, shard
+
+__all__ = ["init_embed", "embed_tokens", "logits_head", "chunked_xent"]
+
+
+def init_embed(key, vocab: int, d_model: int, tie: bool) -> dict:
+    ks = jax.random.split(key, 2)
+    p = {"embedding": dense_init(ks[0], (vocab, d_model), in_axis=1)}
+    if not tie:
+        p["lm_head"] = dense_init(ks[1], (d_model, vocab))
+    return p
+
+
+def embed_tokens(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["embedding"], tokens, axis=0).astype(dtype)
+
+
+def _head_matrix(p: dict, dtype):
+    if "lm_head" in p:
+        return p["lm_head"].astype(dtype)
+    return p["embedding"].T.astype(dtype)
+
+
+def logits_head(p: dict, h: jax.Array, ctx: ShardCtx | None = None) -> jax.Array:
+    """(B, S, D) -> (B, S, V) logits (decode-sized inputs only)."""
+    logits = h @ _head_matrix(p, h.dtype)
+    return shard(ctx, logits, ("dp", None, "tp"))
+
+
+def chunked_xent(
+    p: dict,
+    h: jax.Array,
+    labels: jax.Array,
+    ctx: ShardCtx | None = None,
+    chunk: int = 512,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """Mean next-token cross-entropy without materialising full logits.
+
+    h: (B, S, D) final hidden states; labels: (B, S) int32 (-1 = ignore).
+    """
+    b, s, d = h.shape
+    w = _head_matrix(p, h.dtype)
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = h.shape[1] // c
+    hc = h.reshape(b, nc, c, d).swapaxes(0, 1)  # (nc, B, c, D)
+    lc = labels.reshape(b, nc, c).swapaxes(0, 1)
+    mc = None if mask is None else mask.reshape(b, nc, c).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute chunk logits on backward: without this the
+    # scan stores (nc, B, c, V) f32 logits residuals — tens of GB per device
+    def step(carry, inp):
+        loss_sum, count = carry
+        if mc is None:
+            hb, lb = inp
+            valid = lb >= 0
+        else:
+            hb, lb, vb = inp
+            valid = (lb >= 0) & vb
+        logits = (hb @ w).astype(jnp.float32)  # (B, c, V)
+        logits = shard(ctx, logits, ("dp", None, "tp"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lbl = jnp.take_along_axis(logits, lb.clip(0)[..., None], axis=-1)[..., 0]
+        nll = jnp.where(valid, lse - lbl, 0.0)
+        return (loss_sum + nll.sum(), count + valid.sum()), None
+
+    xs = (hc, lc) if mc is None else (hc, lc, mc)
+    (loss_sum, count), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.int32(0)), xs)
+    return loss_sum / jnp.maximum(count, 1)

@@ -1,0 +1,124 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed into a per-token latent ``c_kv`` of rank ``kv_lora`` plus a
+decoupled RoPE key of ``rope_head_dim`` — that pair is all the KV cache
+stores (the MLA memory win). Keys/values are re-expanded from the latent by
+up-projections at attention time. Queries have a decoupled (nope, rope) split
+matching the keys.
+
+This is the *naive* (non-absorbed) MLA: cache-optimal, recompute-heavy. The
+weight-absorption decode trick (folding W_uk into the query projection) is a
+documented §Perf candidate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import chunked_attention, decode_attention
+from .common import ShardCtx, dense_init, rms_norm, shard
+from .rope import apply_rope
+
+__all__ = ["init_mla", "mla_train_prefill", "mla_decode", "expand_kv"]
+
+
+def init_mla(key, d_model: int, n_heads: int, mla) -> dict:
+    ks = jax.random.split(key, 6)
+    qd = n_heads * (mla.nope_head_dim + mla.rope_head_dim)
+    return {
+        "wq": dense_init(ks[0], (d_model, qd)),
+        "w_dkv": dense_init(ks[1], (d_model, mla.kv_lora + mla.rope_head_dim)),
+        "kv_norm": jnp.zeros((mla.kv_lora,), jnp.float32),
+        "w_uk": dense_init(ks[2], (mla.kv_lora, n_heads * mla.nope_head_dim)),
+        "w_uv": dense_init(ks[3], (mla.kv_lora, n_heads * mla.v_head_dim)),
+        "wo": dense_init(ks[4], (n_heads * mla.v_head_dim, d_model)),
+    }
+
+
+def _project_q(p, x, n_heads, mla, positions, theta):
+    b, s, _ = x.shape
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, n_heads, mla.nope_head_dim + mla.rope_head_dim)
+    q_nope = q[..., : mla.nope_head_dim]
+    q_rope = apply_rope(q[..., mla.nope_head_dim :], positions, theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(p, x, mla, positions, theta):
+    ckv_full = x @ p["w_dkv"].astype(x.dtype)  # (b, s, kv_lora + rope_hd)
+    c_kv = rms_norm(ckv_full[..., : mla.kv_lora], p["kv_norm"])
+    # decoupled rope key is shared across heads (one head's worth), per paper
+    k_rope = apply_rope(ckv_full[..., mla.kv_lora :][:, :, None, :], positions, theta)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def expand_kv(p, c_kv, n_heads, mla):
+    """Latent (b, s, kv_lora) -> k_nope, v: (b, s, H, nope/v head dims)."""
+    b, s, _ = c_kv.shape
+    k_nope = (c_kv @ p["w_uk"].astype(c_kv.dtype)).reshape(b, s, n_heads, mla.nope_head_dim)
+    v = (c_kv @ p["w_uv"].astype(c_kv.dtype)).reshape(b, s, n_heads, mla.v_head_dim)
+    return k_nope, v
+
+
+def mla_train_prefill(
+    p: dict,
+    x: jax.Array,
+    n_heads: int,
+    mla,
+    theta: float,
+    ctx: ShardCtx | None = None,
+    return_cache: bool = False,
+):
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q_nope, q_rope = _project_q(p, x, n_heads, mla, positions, theta)
+    c_kv, k_rope = _compress_kv(p, x, mla, positions, theta)
+    k_nope, v = expand_kv(p, c_kv, n_heads, mla)
+    # concatenate nope+rope per head; rope part broadcasts over heads
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, n_heads, mla.rope_head_dim))
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    q_full = shard(ctx, q_full, ("dp", None, "tp", None))
+    k_full = shard(ctx, k_full, ("dp", None, "tp", None))
+    out = chunked_attention(q_full, k_full, v, causal=True)
+    out = out.reshape(b, s, n_heads * mla.v_head_dim) @ p["wo"].astype(x.dtype)
+    if return_cache:
+        return out, {"c_kv": c_kv, "k_rope": k_rope}
+    return out
+
+
+def mla_decode(
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    lengths: jax.Array,
+    n_heads: int,
+    mla,
+    theta: float,
+    ctx: ShardCtx | None = None,
+):
+    """One-step decode. cache: c_kv (B, L, kv_lora), k_rope (B, L, rope_hd)."""
+    b, one, d = x.shape
+    positions = lengths[:, None]  # (B, 1) current absolute position
+    q_nope, q_rope = _project_q(p, x, n_heads, mla, positions, theta)
+    c_kv_new, k_rope_new = _compress_kv(p, x, mla, positions, theta)
+    cache_ckv = _update_cache(cache["c_kv"], c_kv_new, lengths)
+    cache_krope = _update_cache(cache["k_rope"], k_rope_new, lengths)
+    # expand the whole cache (naive MLA): (B, L, H, ...)
+    k_nope, v = expand_kv(p, cache_ckv, n_heads, mla)
+    L = cache_ckv.shape[1]
+    k_rope_h = jnp.broadcast_to(
+        cache_krope[:, :, None, :], (b, L, n_heads, mla.rope_head_dim)
+    )
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = decode_attention(q_full, k_full, v, lengths + 1)
+    out = out.reshape(b, 1, n_heads * mla.v_head_dim) @ p["wo"].astype(x.dtype)
+    return out, {"c_kv": cache_ckv, "k_rope": cache_krope}
+
+
+def _update_cache(cache: jax.Array, new: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Write new (B, 1, ...) at position lengths[b] per batch row."""
+    b = cache.shape[0]
+    idx = lengths.astype(jnp.int32)
+    return cache.at[jnp.arange(b), idx].set(new[:, 0])

@@ -1,0 +1,48 @@
+"""Channel-mixing blocks: gated (SwiGLU/GeGLU) and plain (GELU/squared-ReLU) MLPs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardCtx, dense_init, shard
+
+__all__ = ["init_mlp", "apply_mlp", "ACTIVATIONS"]
+
+ACTIVATIONS = ("swiglu", "geglu", "gelu", "squared_relu")
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "squared_relu":  # Primer / Nemotron-4
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str) -> dict:
+    ks = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff)),
+            "w_up": dense_init(ks[1], (d_model, d_ff)),
+            "w_down": dense_init(ks[2], (d_ff, d_model)),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d_model, d_ff)),
+        "w_down": dense_init(ks[1], (d_ff, d_model)),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str, ctx: ShardCtx | None = None) -> jax.Array:
+    dt = x.dtype
+    if act in ("swiglu", "geglu"):
+        gate = x @ p["w_gate"].astype(dt)
+        up = x @ p["w_up"].astype(dt)
+        gate = shard(ctx, gate, ("dp", None, "tp"))
+        h = (jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)) * up
+    else:
+        h = _act(act, x @ p["w_up"].astype(dt))
+        h = shard(ctx, h, ("dp", None, "tp"))
+    return h @ p["w_down"].astype(dt)

@@ -1,0 +1,122 @@
+"""Mixture-of-experts channel mixing with grouped capacity-based dispatch.
+
+Routing: softmax router -> top-k experts per token, weights renormalised over
+the selected k. Tokens are processed in **groups** (GShard semantics): the
+token axis is reshaped to (G, t_g) with G aligned to the data-parallel mesh
+axes, and each group scatters its tokens into a per-group capacity buffer
+``(G, E, C_g, d)`` (assignments beyond ``C_g = ceil(t_g·k/E · factor)`` are
+dropped — standard GShard/Switch capacity semantics).
+
+Sharding: the buffer is double-sharded — groups over dp, experts over tp
+(expert parallelism); the scatter from token-sharded to expert-sharded layout
+is the MoE dispatch collective, inserted by SPMD. No (tokens, E, C) one-hot
+intermediate is ever materialised: dispatch is a scatter, combine is a
+gather + segment-sum, so the footprint stays at buffer size / (dp·tp).
+
+Shared experts (DeepSeek-V2 style) run densely for every token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardCtx, dense_init, shard
+
+__all__ = ["init_moe", "apply_moe", "moe_capacity"]
+
+
+def moe_capacity(tokens_per_group: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(tokens_per_group * top_k / n_experts * factor) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def init_moe(key, d_model: int, cfg) -> dict:
+    ks = jax.random.split(key, 8)
+    e, f = cfg.n_experts, cfg.d_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, e)),
+        "w_gate": dense_init(ks[1], (e, d_model, f), in_axis=1),
+        "w_up": dense_init(ks[2], (e, d_model, f), in_axis=1),
+        "w_down": dense_init(ks[3], (e, f, d_model), in_axis=1),
+    }
+    if cfg.n_shared:
+        fs = f * cfg.n_shared
+        p["sh_gate"] = dense_init(ks[4], (d_model, fs))
+        p["sh_up"] = dense_init(ks[5], (d_model, fs))
+        p["sh_down"] = dense_init(ks[6], (fs, d_model))
+    return p
+
+
+def _n_groups(t: int, ctx: ShardCtx | None) -> int:
+    g = ctx.axis_size(ctx.dp) if (ctx is not None and ctx.mesh is not None) else 1
+    while t % g:
+        g -= 1
+    return max(g, 1)
+
+
+def apply_moe(
+    p: dict,
+    x: jax.Array,
+    cfg,
+    ctx: ShardCtx | None = None,
+    n_groups: int | None = None,
+) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D). cfg: configs.base.MoECfg."""
+    dt = x.dtype
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    G = n_groups or _n_groups(t, ctx)
+    tg = t // G
+    cap = moe_capacity(tg, e, k, cfg.capacity_factor)
+    xg = x.reshape(G, tg, d)
+    xg = shard(ctx, xg, ("dp", None, None))
+
+    logits = (xg @ p["router"].astype(dt)).astype(jnp.float32)  # (G, tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (G, tg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_combine(xt, flat_e, gates):
+        # xt: (tg, d); flat_e: (tg*k,); gates: (tg*k,)
+        onehot_cum = jnp.cumsum(jax.nn.one_hot(flat_e, e, dtype=jnp.int32), axis=0)
+        pos = onehot_cum[jnp.arange(tg * k), flat_e] - 1
+        keep = pos < cap
+        tok_idx = jnp.repeat(jnp.arange(tg), k)
+        scatter_e = jnp.where(keep, flat_e, e)  # out-of-range row -> dropped
+        pos_c = jnp.where(keep, pos, 0)
+        buf = jnp.zeros((e, cap, d), dt).at[scatter_e, pos_c].set(
+            xt[tok_idx], mode="drop"
+        )
+        return buf, (scatter_e, pos_c, keep, tok_idx, gates)
+
+    buf, meta = jax.vmap(dispatch_combine)(
+        xg, expert_ids.reshape(G, tg * k), gate_vals.reshape(G, tg * k).astype(dt)
+    )
+    # (G, E, C, d): groups over dp, experts over tp — EP x DP double sharding
+    buf = shard(ctx, buf, ("dp", "tp", None, None))
+
+    h_gate = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt))
+    h_up = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(dt))
+    h = jax.nn.silu(h_gate) * h_up
+    h = shard(ctx, h, ("dp", "tp", None, None))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    out_buf = shard(ctx, out_buf, ("dp", "tp", None, None))
+
+    def combine(out_b, meta):
+        scatter_e, pos_c, keep, tok_idx, gates = meta
+        gathered = out_b[jnp.minimum(scatter_e, e - 1), pos_c]  # (tg*k, d)
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        weighted = gathered * gates[:, None]
+        return jax.ops.segment_sum(weighted, tok_idx, num_segments=tg)
+
+    out = jax.vmap(combine)(out_buf, meta)  # (G, tg, d)
+    out = shard(ctx, out, ("dp", None, None))
+    out = out.reshape(b, s, d)
+
+    if "sh_gate" in p:
+        xt = x.reshape(t, d)
+        sh = jax.nn.silu(xt @ p["sh_gate"].astype(dt)) * (xt @ p["sh_up"].astype(dt))
+        out = out + (sh @ p["sh_down"].astype(dt)).reshape(b, s, d)
+    return out

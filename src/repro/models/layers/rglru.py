@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure: gate branch (linear -> GeLU) ∥ recurrent branch (linear ->
+causal depthwise conv1d(4) -> RG-LRU) -> elementwise product -> output linear.
+
+RG-LRU recurrence (per channel):
+    r_t = σ(W_a ξ_t + b_a)          recurrence gate
+    i_t = σ(W_x ξ_t + b_x)          input gate
+    log a_t = -c * softplus(Λ) ⊙ r_t           (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ ξ_t)
+
+The sequence form runs as a ``jax.lax.associative_scan`` over (a, b) pairs —
+O(log S) depth, the TPU-native mapping of a linear recurrence. Decode is the
+single-step update on an (B, R) state + conv ring buffer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardCtx, dense_init, shard
+
+__all__ = ["init_rglru", "rglru_train", "rglru_decode", "init_rglru_state"]
+
+_C = 8.0
+
+
+def init_rglru(key, d_model: int, r_dim: int, d_conv: int = 4) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, r_dim)),
+        "w_in": dense_init(ks[1], (d_model, r_dim)),
+        "conv_w": dense_init(ks[2], (d_conv, r_dim)),
+        "w_a": dense_init(ks[3], (r_dim, r_dim)),
+        "b_a": jnp.zeros((r_dim,), jnp.float32),
+        "w_x": dense_init(ks[4], (r_dim, r_dim)),
+        "b_x": jnp.zeros((r_dim,), jnp.float32),
+        # Λ init so that softplus(Λ) gives a ~ U(0.9, 0.999) at r=1 (paper)
+        "lam": jnp.full((r_dim,), 0.7, jnp.float32),
+        "w_out": dense_init(ks[5], (r_dim, d_model)),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    s = u.shape[1]
+    for i in range(k):
+        out = out + up[:, i : i + s, :] * w[i][None, None, :]
+    return out
+
+
+def _gates(p, xi):
+    r = jax.nn.sigmoid(xi @ p["w_a"].astype(xi.dtype) + p["b_a"].astype(xi.dtype))
+    i = jax.nn.sigmoid(xi @ p["w_x"].astype(xi.dtype) + p["b_x"].astype(xi.dtype))
+    log_a = (-_C * jax.nn.softplus(p["lam"].astype(jnp.float32))) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i.astype(jnp.float32) * xi.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_train(
+    p: dict,
+    x: jax.Array,
+    ctx: ShardCtx | None = None,
+    initial_state: jax.Array | None = None,
+    return_state: bool = False,
+):
+    """(B, S, D) -> (B, S, D) [+ state (B, R) and conv tail]."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+    xi_pre = x @ p["w_in"].astype(dt)
+    xi = _causal_conv(xi_pre, p["conv_w"].astype(dt))
+    xi = shard(ctx, xi, ("dp", None, "tp"))
+    a, b = _gates(p, xi)
+
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, b_l * a_r + b_r
+
+    cum_a, cum_b = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = cum_b
+    if initial_state is not None:
+        h = h + cum_a * initial_state[:, None, :].astype(jnp.float32)
+    out = (gate.astype(jnp.float32) * h).astype(dt) @ p["w_out"].astype(dt)
+    if return_state:
+        d_conv = p["conv_w"].shape[0]
+        return out, {"h": h[:, -1, :], "conv": xi_pre[:, -(d_conv - 1) :, :]}
+    return out
+
+
+def init_rglru_state(batch: int, r_dim: int, d_conv: int = 4, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, r_dim), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, r_dim), dtype),
+    }
+
+
+def rglru_decode(p: dict, x: jax.Array, cache: dict, ctx: ShardCtx | None = None):
+    """One-step decode: x (B, 1, D) -> (B, 1, D), updated cache."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(dt))  # (B,1,R)
+    xi_pre = x @ p["w_in"].astype(dt)  # (B,1,R)
+    window = jnp.concatenate([cache["conv"].astype(dt), xi_pre], axis=1)  # (B,K,R)
+    w = p["conv_w"].astype(dt)
+    xi = jnp.einsum("bkr,kr->br", window, w)[:, None, :]
+    a, b = _gates(p, xi)  # (B,1,R) f32
+    h_new = a[:, 0] * cache["h"].astype(jnp.float32) + b[:, 0]
+    out = (gate.astype(jnp.float32) * h_new[:, None, :]).astype(dt) @ p["w_out"].astype(dt)
+    return out, {"h": h_new, "conv": window[:, 1:, :]}

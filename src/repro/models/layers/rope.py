@@ -1,0 +1,29 @@
+"""Rotary position embeddings (RoPE), half-split formulation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope"]
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate ``x`` (..., S, H, hd) by position; positions (..., S) int.
+
+    Half-split convention: pairs are (x[..., :hd/2], x[..., hd/2:]).
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2) broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,197 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) — chunked dual form.
+
+The sequence is split into chunks of length Q. Within a chunk the output is
+the masked "attention-like" quadratic form (C Bᵀ ⊙ decay) x; across chunks a
+recurrent state (H, P, N) is passed through a ``lax.scan``. This is the
+published minimal SSD algorithm, expressed with einsums so XLA maps it onto
+the MXU.
+
+Decode maintains the (B, H, P, N) state and a depthwise-conv ring of the last
+``d_conv - 1`` inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardCtx, dense_init, shard
+
+__all__ = ["init_ssd", "ssd_scan", "ssd_train", "ssd_decode", "init_ssd_state"]
+
+
+def init_ssd(key, d_model: int, ssm) -> dict:
+    ks = jax.random.split(key, 4)
+    di, g, n, h = ssm.d_inner, ssm.n_groups, ssm.d_state, ssm.n_heads
+    conv_dim = di + 2 * g * n
+    proj_out = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    return {
+        "w_in": dense_init(ks[0], (d_model, proj_out)),
+        "conv_w": dense_init(ks[1], (ssm.d_conv, conv_dim)),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), jnp.float32),
+        "w_out": dense_init(ks[2], (di, d_model)),
+    }
+
+
+def _split_proj(proj, ssm):
+    di, g, n, h = ssm.d_inner, ssm.n_groups, ssm.d_state, ssm.n_heads
+    z = proj[..., :di]
+    x = proj[..., di : 2 * di]
+    B = proj[..., 2 * di : 2 * di + g * n]
+    C = proj[..., 2 * di + g * n : 2 * di + 2 * g * n]
+    dt = proj[..., 2 * di + 2 * g * n :]
+    return z, x, B, C, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: u (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum of shifted slices — K is tiny (4), unrolled adds beat a conv op here
+    out = jnp.zeros_like(u)
+    s = u.shape[1]
+    for i in range(k):
+        out = out + up[:, i : i + s, :] * w[i][None, None, :]
+    return out
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD. x: (b,s,h,p); dt: (b,s,h) (post-softplus); A: (h,) < 0;
+    B, C: (b,s,g,n). Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+    hpg = h // g  # heads per B/C group
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, g, n)
+    Cc = C.reshape(b, nc, q, g, n)
+
+    dA = dtc * A[None, None, None, :]  # (b,nc,q,h) log-decay per step
+    cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+    seg_total = cs[:, :, -1, :]  # (b,nc,h)
+
+    # intra-chunk (diagonal block): L[i,j] = exp(cs_i - cs_j) for j <= i
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (b,nc,q,q,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # scores: C_i · B_j within chunk, per head group
+    CB = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc)  # (b,nc,q,q,g)
+    CB = jnp.repeat(CB, hpg, axis=-1)  # (b,nc,q,q,h)
+    y_diag = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", CB * L, dtc, xc)
+
+    # chunk states: S_c = sum_j exp(seg_total - cs_j) * dt_j * B_j ⊗ x_j
+    decay_states = jnp.exp(seg_total[:, :, None, :] - cs)  # (b,nc,q,h)
+    Bh = jnp.repeat(Bc, hpg, axis=-2) if g != h else Bc  # (b,nc,q,h,n)
+    states = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchpn", decay_states, dtc, Bh, xc)
+
+    # inter-chunk recurrence over nc
+    init = (
+        jnp.zeros((b, h, p, n), x.dtype)
+        if initial_state is None
+        else initial_state.astype(x.dtype)
+    )
+
+    def step(carry, inp):
+        st_c, seg_c = inp  # (b,h,p,n), (b,h)
+        prev = carry
+        new = prev * jnp.exp(seg_c)[:, :, None, None] + st_c
+        return new, prev  # emit state *entering* the chunk
+
+    final, prev_states = jax.lax.scan(
+        step, init, (states.swapaxes(0, 1), seg_total.swapaxes(0, 1))
+    )
+    prev_states = prev_states.swapaxes(0, 1)  # (b,nc,h,p,n)
+
+    # inter-chunk contribution: y_off_i = (C_i · prev_state) * exp(cs_i)
+    Ch = jnp.repeat(Cc, hpg, axis=-2) if g != h else Cc  # (b,nc,q,h,n)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, jnp.exp(cs))
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)[:, :s]
+    return y, final
+
+
+def ssd_train(p: dict, x: jax.Array, ssm, ctx: ShardCtx | None = None,
+              return_state: bool = False):
+    """Full mamba2 mixer block body (after the pre-norm): (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    dt_ = x.dtype
+    proj = x @ p["w_in"].astype(dt_)
+    z, xi, B, C, dt = _split_proj(proj, ssm)
+    conv_in = jnp.concatenate([xi, B, C], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(dt_)))
+    di = ssm.d_inner
+    g, n, h = ssm.n_groups, ssm.d_state, ssm.n_heads
+    xi = conv_out[..., :di].reshape(b, s, h, ssm.head_dim)
+    B = conv_out[..., di : di + g * n].reshape(b, s, g, n)
+    C = conv_out[..., di + g * n :].reshape(b, s, g, n)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,s,h)
+    A = -jnp.exp(p["A_log"])  # (h,) negative
+    xi = shard(ctx, xi, ("dp", None, "tp", None))
+    y, final = ssd_scan(xi.astype(jnp.float32), dt_act, A, B.astype(jnp.float32),
+                        C.astype(jnp.float32), ssm.chunk)
+    y = y + xi.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(dt_)
+    # gated RMSNorm (mamba2)
+    from .common import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["w_out"].astype(dt_)
+    if return_state:
+        conv_tail = conv_in[:, -(ssm.d_conv - 1) :, :]  # last K-1 raw conv inputs
+        return out, {"state": final, "conv": conv_tail}
+    return out
+
+
+def init_ssd_state(batch: int, ssm, dtype=jnp.float32) -> dict:
+    h, pdim, n = ssm.n_heads, ssm.head_dim, ssm.d_state
+    conv_dim = ssm.d_inner + 2 * ssm.n_groups * ssm.d_state
+    return {
+        "state": jnp.zeros((batch, h, pdim, n), dtype),
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssd_decode(p: dict, x: jax.Array, cache: dict, ssm, ctx: ShardCtx | None = None):
+    """One-step decode: x (B, 1, D) -> (B, 1, D), updated cache."""
+    b, _, d = x.shape
+    dt_ = x.dtype
+    proj = x @ p["w_in"].astype(dt_)
+    z, xi, B, C, dt = _split_proj(proj, ssm)
+    conv_in_new = jnp.concatenate([xi, B, C], axis=-1)  # (b,1,conv_dim)
+    window = jnp.concatenate([cache["conv"].astype(dt_), conv_in_new], axis=1)  # (b,K,conv)
+    w = p["conv_w"].astype(dt_)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w))[:, None, :]
+    di, g, n, h = ssm.d_inner, ssm.n_groups, ssm.d_state, ssm.n_heads
+    xi = conv_out[..., :di].reshape(b, h, ssm.head_dim)
+    Bv = conv_out[..., di : di + g * n].reshape(b, g, n)
+    Cv = conv_out[..., di + g * n :].reshape(b, g, n)
+    hpg = h // g
+    Bh = jnp.repeat(Bv, hpg, axis=1)  # (b,h,n)
+    Ch = jnp.repeat(Cv, hpg, axis=1)
+    dt_act = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt_act * A[None, :])  # (b,h)
+    state = cache["state"].astype(jnp.float32)
+    new_state = state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt_act, Bh.astype(jnp.float32), xi.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), new_state)
+    y = y + xi.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(dt_)
+    from .common import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["w_out"].astype(dt_)
+    new_conv = window[:, 1:, :]
+    return out, {"state": new_state, "conv": new_conv}

@@ -1,0 +1,461 @@
+"""Decoder-only LM assembly covering dense / MoE / MLA / SSM / hybrid / VLM
+architectures.
+
+Layers are organised as ``prefix`` (unrolled, e.g. DeepSeek's leading dense
+layer) + ``groups`` (a ``lax.scan`` over repeats of ``cfg.pattern`` with
+stacked parameters — keeps the HLO one-pattern-long regardless of depth) +
+``suffix`` (unrolled remainder). Three modes share the block bodies:
+
+  * ``train``  — full-sequence causal, remat (``jax.checkpoint``) per group;
+  * ``prefill``— full-sequence causal, emits per-layer caches;
+  * ``decode`` — one token against caches (attention KV / ring-buffer KV /
+                 RG-LRU state / SSD state).
+
+Caches are pytrees mirroring the prefix/groups/suffix layout, so the same
+scan machinery threads them.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers.attention import chunked_attention, decode_attention, local_attention
+from .layers.common import ShardCtx, cast, dense_init, rms_norm, shard
+from .layers.embeddings import chunked_xent, embed_tokens, init_embed, logits_head
+from .layers.mla import init_mla, mla_decode, mla_train_prefill
+from .layers.mlp import apply_mlp, init_mlp
+from .layers.moe import apply_moe, init_moe
+from .layers.rglru import init_rglru, init_rglru_state, rglru_decode, rglru_train
+from .layers.ssd import init_ssd, init_ssd_state, ssd_decode, ssd_train
+
+__all__ = ["init_lm", "lm_forward", "lm_train_loss", "lm_prefill", "lm_decode", "init_cache", "layout"]
+
+
+# ---------------------------------------------------------------- layout
+
+
+def layout(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(prefix_len, n_groups, suffix_len) over cfg.n_layers."""
+    prefix = cfg.moe.first_dense if cfg.moe else 0
+    glen = len(cfg.pattern)
+    remaining = cfg.n_layers - prefix
+    n_groups = remaining // glen
+    suffix = remaining - n_groups * glen
+    return prefix, n_groups, suffix
+
+
+def _layer_kinds(cfg: ArchConfig) -> list[str]:
+    return cfg.layer_types()
+
+
+# ---------------------------------------------------------------- init
+
+
+def _init_attn(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, kv * hd)),
+        "wv": dense_init(ks[2], (d, kv * hd)),
+        "wo": dense_init(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    return p
+
+
+def _init_block(key, cfg: ArchConfig, kind: str, layer_idx: int) -> dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    bp: dict[str, Any] = {"norm1": jnp.zeros((d,), jnp.float32)}
+    if kind in ("attn", "local"):
+        if cfg.mla is not None:
+            bp["attn"] = init_mla(ks[0], d, cfg.n_heads, cfg.mla)
+        else:
+            bp["attn"] = _init_attn(ks[0], cfg)
+    elif kind == "rglru":
+        bp["rglru"] = init_rglru(ks[0], d, cfg.rglru_dim)
+    elif kind == "ssd":
+        bp["ssd"] = init_ssd(ks[0], d, cfg.ssm)
+        return bp  # mamba2 block: mixer only, no MLP
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    bp["norm2"] = jnp.zeros((d,), jnp.float32)
+    if cfg.moe is not None and layer_idx >= cfg.moe.first_dense:
+        bp["moe"] = init_moe(ks[1], d, cfg.moe)
+    else:
+        ff = cfg.d_ff
+        if cfg.moe is not None and layer_idx < cfg.moe.first_dense:
+            ff = cfg.moe.first_dense_ff or cfg.d_ff
+        bp["mlp"] = init_mlp(ks[1], d, ff, cfg.mlp_act)
+    return bp
+
+
+def _stack_trees(trees: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(key, cfg: ArchConfig) -> dict:
+    kinds = _layer_kinds(cfg)
+    prefix, n_groups, suffix = layout(cfg)
+    glen = len(cfg.pattern)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    params: dict[str, Any] = {
+        "embed": init_embed(keys[-1], cfg.vocab, cfg.d_model, cfg.tie_embeddings),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    params["prefix"] = [
+        _init_block(keys[i], cfg, kinds[i], i) for i in range(prefix)
+    ]
+    group_params = []
+    for pos in range(glen):
+        per_group = []
+        for gi in range(n_groups):
+            li = prefix + gi * glen + pos
+            per_group.append(_init_block(keys[li], cfg, kinds[li], li))
+        group_params.append(_stack_trees(per_group) if per_group else None)
+    params["groups"] = group_params
+    base = prefix + n_groups * glen
+    params["suffix"] = [
+        _init_block(keys[base + i], cfg, kinds[base + i], base + i)
+        for i in range(suffix)
+    ]
+    return params
+
+
+# ---------------------------------------------------------------- block body
+
+
+def _attn_apply(bp, cfg, ctx, x, kind, mode, state, lengths):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.mla is not None:
+        if mode == "train":
+            return mla_train_prefill(bp["attn"], x, h, cfg.mla, cfg.rope_theta, ctx), None
+        if mode == "prefill":
+            out, cache = mla_train_prefill(
+                bp["attn"], x, h, cfg.mla, cfg.rope_theta, ctx, return_cache=True
+            )
+            return out, cache
+        return mla_decode(bp["attn"], x, state, lengths, h, cfg.mla, cfg.rope_theta, ctx)
+
+    from .layers.rope import apply_rope
+
+    p = bp["attn"]
+    b, s, _ = x.shape
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    q = shard(ctx, q, ("dp", None, "tp", None))
+    k = shard(ctx, k, ("dp", None, "tp", None))
+
+    if mode in ("train", "prefill"):
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if kind == "local" and cfg.window:
+            out = local_attention(q, k, v, window=cfg.window)
+        else:
+            out = chunked_attention(q, k, v, causal=True)
+        new_state = None
+        if mode == "prefill":
+            if kind == "local" and cfg.window and s > cfg.window:
+                L = cfg.window
+                slot = jnp.arange(L)
+                pos_of_slot = slot + ((s - 1 - slot) // L) * L  # ring layout p % L
+                new_state = {"k": k[:, pos_of_slot], "v": v[:, pos_of_slot]}
+            else:
+                new_state = {"k": k, "v": v}
+    else:  # decode
+        positions = lengths[:, None]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        L = state["k"].shape[1]
+        is_ring = kind == "local" and cfg.window and L <= cfg.window
+        idx = (lengths % L) if is_ring else jnp.minimum(lengths, L - 1)
+        bi = jnp.arange(b)
+        k_cache = state["k"].at[bi, idx].set(k[:, 0])
+        v_cache = state["v"].at[bi, idx].set(v[:, 0])
+        attn_len = jnp.minimum(lengths + 1, L) if is_ring else (lengths + 1)
+        win = 0 if is_ring else (cfg.window if kind == "local" else 0)
+        out = decode_attention(q, k_cache, v_cache, attn_len, window=win)
+        new_state = {"k": k_cache, "v": v_cache}
+
+    out = out.reshape(b, s, h * hd) @ p["wo"].astype(dt)
+    return out, new_state
+
+
+def _apply_block(bp, kind, cfg, ctx, x, mode, state, lengths):
+    # sequence-parallel boundary spec: constraining the *projection outputs*
+    # (before the residual add) to this layout lets SPMD emit reduce-scatters
+    # for the tensor-parallel partial sums instead of all-reduce + slice —
+    # 2x the wire bytes saved on the dominant train collective
+    # (EXPERIMENTS.md §Perf iteration 8).
+    sp_spec = ("dp", "tp" if ctx and ctx.sp and mode == "train" else None, None)
+    h = rms_norm(x, bp["norm1"])
+    h = shard(ctx, h, sp_spec)
+    if kind in ("attn", "local"):
+        mix, new_state = _attn_apply(bp, cfg, ctx, h, kind, mode, state, lengths)
+    elif kind == "rglru":
+        if mode == "train":
+            mix, new_state = rglru_train(bp["rglru"], h, ctx), None
+        elif mode == "prefill":
+            mix, new_state = rglru_train(bp["rglru"], h, ctx, return_state=True)
+        else:
+            mix, new_state = rglru_decode(bp["rglru"], h, state, ctx)
+    elif kind == "ssd":
+        if mode == "train":
+            mix, new_state = ssd_train(bp["ssd"], h, cfg.ssm, ctx), None
+        elif mode == "prefill":
+            mix, new_state = ssd_train(bp["ssd"], h, cfg.ssm, ctx, return_state=True)
+        else:
+            mix, new_state = ssd_decode(bp["ssd"], h, state, cfg.ssm, ctx)
+    else:
+        raise ValueError(kind)
+    x = x + shard(ctx, mix, sp_spec)
+    if "mlp" in bp or "moe" in bp:
+        h2 = rms_norm(x, bp["norm2"])
+        if "moe" in bp:
+            x = x + shard(ctx, apply_moe(bp["moe"], h2, cfg.moe, ctx), sp_spec)
+        else:
+            x = x + shard(ctx, apply_mlp(bp["mlp"], h2, cfg.mlp_act, ctx), sp_spec)
+    x = shard(ctx, x, ("dp", "tp" if ctx and ctx.sp else None, None))
+    return x, new_state
+
+
+# ---------------------------------------------------------------- forward
+
+
+def lm_forward(
+    params: dict,
+    cfg: ArchConfig,
+    ctx: ShardCtx | None,
+    inputs_embeds: jax.Array,
+    mode: str = "train",
+    cache: dict | None = None,
+    lengths: jax.Array | None = None,
+    unroll_groups: bool = False,
+):
+    """Run the block stack. Returns (hidden (B,S,D), new_cache | None).
+
+    ``unroll_groups`` replaces the group scan with a Python loop. For decode
+    with *unstacked* caches (``init_cache(..., stacked=False)``) this lets
+    XLA alias every donated per-layer cache leaf in place — the scan form
+    double-buffers the stacked cache (xs + ys copies), which for a 110B
+    32k-decode cache is the difference between fitting HBM and not
+    (EXPERIMENTS.md §Perf iteration 3).
+    """
+    kinds = _layer_kinds(cfg)
+    prefix, n_groups, suffix = layout(cfg)
+    glen = len(cfg.pattern)
+    x = inputs_embeds
+    new_cache: dict[str, Any] = {"prefix": [], "groups": None, "suffix": []}
+
+    for i in range(prefix):
+        st = cache["prefix"][i] if cache else None
+        x, ns = _apply_block(params["prefix"][i], kinds[i], cfg, ctx, x, mode, st, lengths)
+        new_cache["prefix"].append(ns)
+
+    if n_groups > 0 and unroll_groups:
+        groups_out = []
+        cache_groups = cache["groups"] if cache else None
+        for gi in range(n_groups):
+            new_states = []
+            for pos in range(glen):
+                gp = jax.tree.map(lambda a: a[gi], params["groups"][pos])
+                if cache_groups is None:
+                    st = None
+                elif isinstance(cache_groups, (list,)):  # unstacked: [group][pos]
+                    st = cache_groups[gi][pos]
+                else:  # stacked pytree: slice
+                    st = jax.tree.map(lambda a: a[gi], cache_groups[pos])
+                x, ns = _apply_block(gp, cfg.pattern[pos], cfg, ctx, x, mode, st, lengths)
+                new_states.append(ns)
+            groups_out.append(tuple(new_states))
+        new_cache["groups"] = groups_out
+    elif n_groups > 0 and mode == "decode":
+        # decode: the stacked caches ride in the scan CARRY and are updated
+        # with dynamic_update_index_in_dim — XLA aliases loop-carried state
+        # in place, so the (donated) cache exists exactly once in HBM. The
+        # xs/ys form double-buffers it (input stack + output stack), which
+        # for a 110B 32k cache is ~2x cache size of extra temp
+        # (EXPERIMENTS.md §Perf iteration 3).
+        group_states = cache["groups"]
+
+        def group_body(carry, xs):
+            xc, caches = carry
+            gi, gparams = xs
+            new_states = []
+            states = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, gi, 0, keepdims=False),
+                caches,
+            )
+            for pos in range(glen):
+                kind = cfg.pattern[pos]
+                xc, ns = _apply_block(
+                    gparams[pos], kind, cfg, ctx, xc, mode, states[pos], lengths
+                )
+                new_states.append(ns)
+            caches = jax.tree.map(
+                lambda buf, ns: jax.lax.dynamic_update_index_in_dim(buf, ns, gi, 0),
+                caches,
+                tuple(new_states),
+            )
+            return (xc, caches), None
+
+        xs = (jnp.arange(n_groups), tuple(params["groups"]))
+        (x, updated), _ = jax.lax.scan(group_body, (x, tuple(group_states)), xs)
+        new_cache["groups"] = updated
+    elif n_groups > 0:
+        group_states = cache["groups"] if cache else tuple([None] * glen)
+
+        def group_body(xc, xs):
+            gparams, gstates = xs
+            new_states = []
+            for pos in range(glen):
+                kind = cfg.pattern[pos]
+                xc, ns = _apply_block(
+                    gparams[pos], kind, cfg, ctx, xc, mode, gstates[pos], lengths
+                )
+                new_states.append(ns)
+            return xc, tuple(new_states)
+
+        body = jax.checkpoint(group_body) if mode == "train" else group_body
+        xs = (tuple(params["groups"]), tuple(group_states))
+        x, stacked_states = jax.lax.scan(body, x, xs)
+        new_cache["groups"] = stacked_states
+
+    base = prefix + n_groups * glen
+    for i in range(suffix):
+        st = cache["suffix"][i] if cache else None
+        x, ns = _apply_block(
+            params["suffix"][i], kinds[base + i], cfg, ctx, x, mode, st, lengths
+        )
+        new_cache["suffix"].append(ns)
+
+    x = rms_norm(x, params["final_norm"])
+    return x, (new_cache if mode in ("prefill", "decode") else None)
+
+
+def _embed_inputs(params, cfg, tokens, extra_embeds, ctx):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    tok = embed_tokens(params["embed"], tokens, dt)
+    if extra_embeds is not None:
+        tok = jnp.concatenate([extra_embeds.astype(dt), tok], axis=1)
+    tok = tok * jnp.asarray(cfg.d_model**0.5, dt)
+    return shard(ctx, tok, ("dp", None, None))
+
+
+def lm_train_loss(params, cfg, ctx, tokens, labels, extra_embeds=None):
+    x = _embed_inputs(params, cfg, tokens, extra_embeds, ctx)
+    h, _ = lm_forward(params, cfg, ctx, x, mode="train")
+    if extra_embeds is not None:  # vlm: loss over text positions only
+        h = h[:, extra_embeds.shape[1] :]
+    return chunked_xent(params["embed"], h, labels, ctx)
+
+
+def lm_prefill(params, cfg, ctx, tokens, extra_embeds=None):
+    x = _embed_inputs(params, cfg, tokens, extra_embeds, ctx)
+    h, cache = lm_forward(params, cfg, ctx, x, mode="prefill")
+    logits = logits_head(params["embed"], h[:, -1:], ctx)
+    return logits, cache
+
+
+def lm_decode(params, cfg, ctx, tokens, positions, cache, unroll_groups: bool = False):
+    x = _embed_inputs(params, cfg, tokens, None, ctx)
+    h, new_cache = lm_forward(params, cfg, ctx, x, mode="decode", cache=cache,
+                              lengths=positions, unroll_groups=unroll_groups)
+    logits = logits_head(params["embed"], h, ctx)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------- caches
+
+
+def _block_state_specs(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype):
+    """ShapeDtypeStruct pytree of one layer's decode state (no allocation)."""
+    S = jax.ShapeDtypeStruct
+    if kind in ("attn", "local"):
+        if cfg.mla is not None:
+            return {
+                "c_kv": S((batch, max_len, cfg.mla.kv_lora), dtype),
+                "k_rope": S((batch, max_len, cfg.mla.rope_head_dim), dtype),
+            }
+        L = min(cfg.window, max_len) if (kind == "local" and cfg.window) else max_len
+        shp = (batch, L, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": S(shp, dtype), "v": S(shp, dtype)}
+    if kind == "rglru":
+        return {
+            "h": S((batch, cfg.rglru_dim), jnp.float32),
+            "conv": S((batch, 3, cfg.rglru_dim), dtype),
+        }
+    if kind == "ssd":
+        s = cfg.ssm
+        conv_dim = s.d_inner + 2 * s.n_groups * s.d_state
+        return {
+            "state": S((batch, s.n_heads, s.head_dim, s.d_state), jnp.float32),
+            "conv": S((batch, s.d_conv - 1, conv_dim), dtype),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(
+    cfg: ArchConfig,
+    batch: int,
+    max_len: int,
+    abstract: bool = False,
+    stacked: bool = True,
+) -> dict:
+    """Decode cache pytree; ``abstract=True`` returns ShapeDtypeStructs only
+    (the dry-run path — production decode caches would not fit one host).
+    ``stacked=False`` emits per-layer leaves ([group][pos] lists) for the
+    unrolled decode path, where each leaf donates/aliases independently."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    kinds = _layer_kinds(cfg)
+    prefix, n_groups, suffix = layout(cfg)
+    glen = len(cfg.pattern)
+
+    def mk(kind):
+        return _block_state_specs(cfg, kind, batch, max_len, dt)
+
+    cache: dict[str, Any] = {
+        "prefix": [mk(kinds[i]) for i in range(prefix)],
+        "suffix": [
+            mk(kinds[prefix + n_groups * glen + i]) for i in range(suffix)
+        ],
+    }
+    if stacked:
+        groups = []
+        for pos in range(glen):
+            if n_groups == 0:
+                groups.append(None)
+                continue
+            one = mk(cfg.pattern[pos])
+            groups.append(
+                jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct((n_groups,) + a.shape, a.dtype), one
+                )
+            )
+        cache["groups"] = tuple(groups)
+    else:
+        cache["groups"] = [
+            tuple(mk(cfg.pattern[pos]) for pos in range(glen)) for _ in range(n_groups)
+        ]
+    if not abstract:
+        cache = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), cache)
+    return cache

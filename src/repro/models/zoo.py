@@ -1,0 +1,91 @@
+"""Model zoo dispatcher: one uniform step API over all 10 architectures.
+
+``build(cfg)`` returns a :class:`Model` with ``init`` / ``train_loss`` /
+``prefill`` / ``decode`` / ``init_cache`` — decoder-only families route to
+``models.lm``, the audio family to ``models.encdec``. The launcher, trainer,
+server, smoke tests and dry-run all consume this interface only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers.common import ShardCtx
+from . import encdec as _encdec
+from . import lm as _lm
+
+__all__ = ["Model", "build"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    train_loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+    def abstract_params(self, seed: int = 0):
+        """Parameter shapes without allocation (dry-run)."""
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(seed)))
+
+
+def build(cfg: ArchConfig) -> Model:
+    if cfg.family == "audio":
+        def train_loss(params, ctx, batch):
+            return _encdec.encdec_train_loss(
+                params, cfg, ctx, batch["frames"], batch["tokens"], batch["labels"]
+            )
+
+        def prefill(params, ctx, batch):
+            return _encdec.encdec_prefill(params, cfg, ctx, batch["frames"], batch["tokens"])
+
+        def decode(params, ctx, batch, cache):
+            return _encdec.encdec_decode(
+                params, cfg, ctx, batch["tokens"], batch["positions"], cache
+            )
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: _encdec.init_encdec(key, cfg),
+            train_loss=train_loss,
+            prefill=prefill,
+            decode=decode,
+            init_cache=lambda batch, max_len, abstract=False: _encdec.init_encdec_cache(
+                cfg, batch, max_len, abstract
+            ),
+        )
+
+    def extra(batch):
+        if cfg.frontend == "vision_stub":
+            return batch["patches"]
+        return None
+
+    def train_loss(params, ctx, batch):
+        return _lm.lm_train_loss(
+            params, cfg, ctx, batch["tokens"], batch["labels"], extra_embeds=extra(batch)
+        )
+
+    def prefill(params, ctx, batch):
+        return _lm.lm_prefill(params, cfg, ctx, batch["tokens"], extra_embeds=extra(batch))
+
+    def decode(params, ctx, batch, cache, unroll_groups=False):
+        return _lm.lm_decode(params, cfg, ctx, batch["tokens"], batch["positions"],
+                             cache, unroll_groups=unroll_groups)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: _lm.init_lm(key, cfg),
+        train_loss=train_loss,
+        prefill=prefill,
+        decode=decode,
+        init_cache=lambda batch, max_len, abstract=False, stacked=True: _lm.init_cache(
+            cfg, batch, max_len, abstract, stacked=stacked
+        ),
+    )

@@ -1,0 +1,284 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+  t_compute    = flops_per_device / peak_bf16_flops
+  t_memory     = hbm_bytes_per_device / hbm_bw
+  t_collective = Σ_op collective_cost(op) ; ring-model per op:
+                 all-gather / reduce-scatter move (n-1)/n of the *global*
+                 tensor bytes through each device's links; all-reduce costs
+                 2x reduce-scatter; all-to-all moves (n-1)/n of the local
+                 shard; collective-permute moves the operand once.
+
+``compiled.cost_analysis()`` on the SPMD-partitioned module reports
+*per-device* flops / bytes (verified in tests), matching the per-device
+formulation above (equivalent to the global/(chips·peak) form for balanced
+shards). Collective operands are parsed from the optimized HLO text
+(per-shard shapes); replica-group sizes come from the op's replica_groups
+attribute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+from .hw import HW, V5E
+
+__all__ = ["CollectiveOp", "parse_collectives", "roofline_terms", "RooflineReport"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.3 = bf16[16,512,8192]{2,1,0} all-gather(%param.5), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+# computation headers: "%name (params...) -> type {" — params may nest parens
+_COMPUTATION_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    dtype: str
+    shape: tuple[int, ...]
+    group_size: int
+    trip_mult: int = 1  # product of enclosing while-loop trip counts
+
+    @property
+    def bytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Split optimized HLO into {computation_name: lines}."""
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _COMPUTATION_RE.match(stripped)
+        if m and stripped.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Scan-loop conditions compare the counter against a constant bound."""
+    consts = [int(m.group(1)) for ln in cond_lines for m in _CONST_RE.finditer(ln)]
+    return max(consts) if consts else 1
+
+
+def _multipliers(comps: dict[str, list[str]]) -> dict[str, int]:
+    """Effective execution multiplier per computation (ENTRY = 1; while
+    bodies multiply by their trip count; call/conditional multiply by 1)."""
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    mult: dict[str, int] = {name: 0 for name in comps}
+    if entry is None:
+        return mult
+    mult[entry] = 1
+    # iterate to fixpoint (call graph is a DAG; few levels of nesting)
+    for _ in range(12):
+        changed = False
+        for name, lines in comps.items():
+            m = mult.get(name, 0)
+            if m == 0:
+                continue
+            for ln in lines:
+                wm = _WHILE_RE.search(ln)
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    trips = _trip_count(comps.get(cond, []))
+                    for target in (body, cond):
+                        new = m * trips if target == body else m
+                        if target in mult and mult[target] < new:
+                            mult[target] = new
+                            changed = True
+                for ref in re.finditer(r"(?:calls=|to_apply=|call\()\%?([\w.\-]+)", ln):
+                    target = ref.group(1)
+                    if target in mult and mult[target] < m:
+                        mult[target] = m
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    """Extract collective ops (per-shard output shapes) from optimized HLO,
+    with while-loop trip-count multipliers (scan bodies execute trip times;
+    a naive line scan would count them once)."""
+    comps = _split_computations(hlo_text)
+    if not comps:  # fall back: treat whole text as one computation
+        comps = {"main": hlo_text.splitlines()}
+    mults = _multipliers(comps)
+    ops = []
+    for name, lines in comps.items():
+        m = mults.get(name, 1) or 1
+        for line in lines:
+            if not any(k in line for k in _COLL_KINDS):
+                continue
+            om = _OP_RE.search(line)
+            if not om:
+                continue
+            dtype, dims, kind = om.group(1), om.group(2), om.group(3)
+            shape = tuple(int(x) for x in dims.split(",") if x) if dims else ()
+            gs = 1
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                gs = int(gm.group(2))  # [n_groups, group_size]
+            else:
+                gl = _GROUPS_LIST_RE.search(line)
+                if gl:
+                    gs = len([x for x in gl.group(1).split(",") if x.strip() != ""])
+            ops.append(
+                CollectiveOp(kind=kind, dtype=dtype, shape=shape, group_size=gs,
+                             trip_mult=m)
+            )
+    return ops
+
+
+def collective_seconds(ops: list[CollectiveOp], hw: HW = V5E) -> tuple[float, int]:
+    """Ring-model serialization time and total wire bytes per device."""
+    total_t = 0.0
+    total_bytes = 0
+    bw = hw.ici_link_bw * hw.ici_links
+    for op in ops:
+        n = max(op.group_size, 1)
+        if n == 1:
+            continue
+        frac = (n - 1) / n
+        if op.kind == "all-gather":
+            # output is the gathered (global) tensor per shard
+            wire = op.bytes * frac
+        elif op.kind == "reduce-scatter":
+            # output is the scattered shard; global = bytes * n
+            wire = op.bytes * n * frac
+        elif op.kind == "all-reduce":
+            # reduce-scatter + all-gather over the same (per-shard) tensor
+            wire = 2 * op.bytes * frac
+        elif op.kind == "all-to-all":
+            wire = op.bytes * frac
+        else:  # collective-permute
+            wire = op.bytes
+        wire *= op.trip_mult
+        total_t += wire / bw
+        total_bytes += int(wire)
+    return total_t, total_bytes
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    collective_bytes_per_dev: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    n_collectives: int
+    model_flops: float = 0.0
+    raw_flops: float = 0.0  # cost_analysis (scan bodies counted once)
+    raw_bytes: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound used as the conservative roof."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the dominant-term-bound step achieves
+        IF the model flops were run at peak: model_flops_time / step_time."""
+        if self.step_time == 0:
+            return 0.0
+        return min(1.0, (self.model_flops / max(self.flops_per_dev, 1)) * self.t_compute / self.step_time)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops_per_dev,
+            "hbm_bytes_per_dev": self.hbm_bytes_per_dev,
+            "collective_bytes_per_dev": self.collective_bytes_per_dev,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "n_collectives": self.n_collectives,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": (
+                self.model_flops / self.flops_per_dev if self.flops_per_dev else 0.0
+            ),
+            "raw_cost_analysis_flops": self.raw_flops,
+            "raw_cost_analysis_bytes": self.raw_bytes,
+        }
+
+
+def roofline_terms(
+    cost: dict,
+    hlo_text: str,
+    hw: HW = V5E,
+    model_flops_per_dev: float = 0.0,
+    analytic=None,
+) -> RooflineReport:
+    """Three-term roofline. ``analytic`` (a ``WorkModel``) supplies
+    trip-count-correct flops/bytes; the raw ``cost_analysis`` numbers (which
+    count scan bodies once — see module docstring of roofline.analytic) are
+    retained in ``raw_*`` fields for reference."""
+    raw_flops = float(cost.get("flops", 0.0) or 0.0)
+    raw_bytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    flops = analytic.flops if analytic is not None else raw_flops
+    bytes_acc = analytic.hbm_bytes if analytic is not None else raw_bytes
+    ops = parse_collectives(hlo_text)
+    t_coll, wire_bytes = collective_seconds(ops, hw)
+    rep = RooflineReport(
+        flops_per_dev=flops,
+        hbm_bytes_per_dev=bytes_acc,
+        collective_bytes_per_dev=wire_bytes,
+        t_compute=flops / hw.peak_bf16_flops,
+        t_memory=bytes_acc / hw.hbm_bw,
+        t_collective=t_coll,
+        n_collectives=len(ops),
+        model_flops=model_flops_per_dev,
+    )
+    rep.raw_flops = raw_flops
+    rep.raw_bytes = raw_bytes
+    return rep

@@ -1,0 +1,27 @@
+"""Target-hardware model: TPU v5e chip constants (per assignment)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["HW", "V5E"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_bf16_flops: float  # per chip, FLOP/s
+    hbm_bw: float  # bytes/s
+    ici_link_bw: float  # bytes/s per link
+    ici_links: int  # links per chip participating in a collective (2D torus)
+    hbm_bytes: float
+
+
+V5E = HW(
+    name="tpu-v5e",
+    peak_bf16_flops=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    ici_links=4,
+    hbm_bytes=16e9,
+)

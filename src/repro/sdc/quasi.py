@@ -1,0 +1,95 @@
+"""Statistical disclosure control application layer (paper §1, §1.1).
+
+Wraps the miner into the quasi-identifier workflow the paper motivates with
+the AOL incident: given a categorical table, report every minimal attribute
+combination occurring ≤ τ times — the quasi-identifiers — plus k-anonymity
+risk summaries, and the grouping transform of §1.1 (bucket values so each
+value occurs at least k times).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import KyivConfig, MiningResult, mine
+
+__all__ = ["QuasiIdentifierReport", "find_quasi_identifiers", "k_anonymize_columns"]
+
+
+@dataclasses.dataclass
+class QuasiIdentifierReport:
+    result: MiningResult
+    tau: int
+    kmax: int
+
+    @property
+    def n_quasi_identifiers(self) -> int:
+        return len(self.result.itemsets)
+
+    def by_size(self) -> dict[int, int]:
+        out: dict[int, int] = {}
+        for ids, _ in self.result.itemsets:
+            out[len(ids)] = out.get(len(ids), 0) + 1
+        return out
+
+    def risky_columns(self) -> dict[int, int]:
+        """How many quasi-identifiers touch each column — prioritises masking."""
+        table = self.result.prep.table
+        out: dict[int, int] = {}
+        for ids, _ in self.result.itemsets:
+            for i in ids:
+                c = int(table.col[i])
+                out[c] = out.get(c, 0) + 1
+        return out
+
+    def unique_records(self) -> int:
+        """Rows pinpointed by at least one τ-infrequent combination."""
+        from ..core.items import bits_to_rows
+
+        table = self.result.prep.table
+        hit = np.zeros(table.n_rows, dtype=bool)
+        for ids, _ in self.result.itemsets:
+            m = table.bits[ids[0]].copy()
+            for i in ids[1:]:
+                m &= table.bits[i]
+            rows = bits_to_rows(m)
+            hit[rows] = True
+        return int(hit.sum())
+
+
+def find_quasi_identifiers(
+    dataset: np.ndarray, tau: int = 1, kmax: int = 3, **config_kw
+) -> QuasiIdentifierReport:
+    res = mine(dataset, KyivConfig(tau=tau, kmax=kmax, **config_kw))
+    return QuasiIdentifierReport(result=res, tau=tau, kmax=kmax)
+
+
+def k_anonymize_columns(dataset: np.ndarray, k: int = 5, seed: int = 0) -> np.ndarray:
+    """§1.1 grouping transform: per column, bucket values occurring < k times
+    into groups of >= k occurrences (values are replaced by a group id)."""
+    rng = np.random.default_rng(seed)
+    out = np.array(dataset, copy=True)
+    n, m = out.shape
+    for j in range(m):
+        uniq, inv, counts = np.unique(out[:, j], return_inverse=True, return_counts=True)
+        rare = np.nonzero(counts < k)[0]
+        if len(rare) == 0:
+            continue
+        order = rng.permutation(rare)
+        group_of = np.arange(len(uniq))
+        # pack rare values into buckets whose total occurrence count >= k
+        bucket, bucket_count, next_gid = [], 0, len(uniq)
+        for v in order:
+            bucket.append(v)
+            bucket_count += counts[v]
+            if bucket_count >= k:
+                for b in bucket:
+                    group_of[b] = next_gid
+                next_gid += 1
+                bucket, bucket_count = [], 0
+        for b in bucket:  # leftover: merge into the last bucket
+            group_of[b] = next_gid - 1 if next_gid > len(uniq) else len(uniq)
+        out[:, j] = group_of[inv]
+    return out

@@ -1,0 +1,100 @@
+"""Serving steps: prefill and batched decode over the model zoo.
+
+``make_prefill_step`` / ``make_decode_step`` return jittable closures;
+``generate`` runs a host-side batched greedy/sampling loop (used by the
+serving example and the correctness test that cross-checks incremental decode
+against a full forward pass).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.zoo import Model
+
+__all__ = ["make_prefill_step", "make_decode_step", "generate"]
+
+
+def make_prefill_step(model: Model, plan=None):
+    ctx = plan.ctx() if plan is not None else None
+
+    def prefill_step(params, batch):
+        return model.prefill(params, ctx, batch)
+
+    return jax.jit(prefill_step)
+
+
+def make_decode_step(model: Model, plan=None):
+    ctx = plan.ctx() if plan is not None else None
+
+    def decode_step(params, batch, cache):
+        return model.decode(params, ctx, batch, cache)
+
+    return jax.jit(decode_step)
+
+
+def generate(
+    model: Model,
+    params,
+    prompt_tokens: np.ndarray,
+    max_new: int = 16,
+    temperature: float = 0.0,
+    seed: int = 0,
+    extra: dict | None = None,
+):
+    """Greedy/temperature sampling. prompt_tokens: (B, S). Returns (B, max_new)."""
+    b, s = prompt_tokens.shape
+    prefill = make_prefill_step(model)
+    decode = make_decode_step(model)
+    batch: dict[str, Any] = {"tokens": jnp.asarray(prompt_tokens, jnp.int32)}
+    if extra:
+        batch.update(extra)
+    logits, cache = prefill(params, batch)
+    # grow caches so decode has room: pad attention caches to s + max_new
+    cache = _grow_cache(cache, s, s + max_new)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    pos = s
+    last = logits[:, -1]
+    for i in range(max_new):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, last / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(last, axis=-1)
+        out.append(np.asarray(tok))
+        dec_batch = {
+            "tokens": tok[:, None].astype(jnp.int32),
+            "positions": jnp.full((b,), pos, jnp.int32),
+        }
+        logits, cache = decode(params, dec_batch, cache)
+        last = logits[:, 0]
+        pos += 1
+    return np.stack(out, axis=1)
+
+
+def _grow_cache(cache, cur_len: int, new_len: int):
+    """Pad sequence dim of attention caches from cur_len to new_len."""
+    if new_len <= cur_len:
+        return cache
+
+    def grow(path, leaf):
+        name = None
+        for k in path:
+            if hasattr(k, "key"):
+                name = str(k.key)
+        if name in ("k", "v", "c_kv", "k_rope"):
+            # sequence dim: (…, B, L, …) — find the dim equal to cur_len
+            shape = list(leaf.shape)
+            for d, sz in enumerate(shape):
+                if sz == cur_len:
+                    pad = [(0, 0)] * len(shape)
+                    pad[d] = (0, new_len - cur_len)
+                    return jnp.pad(leaf, pad)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(grow, cache)

@@ -1,0 +1,130 @@
+"""Train-step builders: GSPMD step (sharding-constraint driven) and the
+manual-DP variant with int8-compressed gradient reduction.
+
+``make_train_step`` returns a jittable ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` closure; with a :class:`~repro.distributed.
+sharding.Plan` it is jitted with explicit in/out shardings so the dry-run can
+lower it on the production meshes. The data loop/checkpoint orchestration
+lives in ``launch/train.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.zoo import Model
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+__all__ = ["make_train_step", "init_train_state", "make_compressed_dp_step"]
+
+
+def init_train_state(model: Model, key, opt_cfg: OptConfig):
+    params = model.init(key)
+    return params, adamw_init(params)
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig, plan=None, grad_accum: int = 1,
+                    cast_bf16: bool = True):
+    """grad_accum > 1 scans over microbatches (leading batch split), summing
+    grads — the standard activation-memory lever: peak activation temp
+    scales ~1/grad_accum while FLOPs/collectives per token are unchanged.
+
+    cast_bf16 casts matrix params to bf16 *before* the layer scan, so the
+    ZeRO/FSDP per-layer weight all-gathers move half the bytes (the compute
+    already ran in bf16 via per-use casts; this hoists the cast above the
+    gather). Norms/scales (1-D) stay f32. Master weights, grads and AdamW
+    moments remain f32."""
+    ctx = plan.ctx() if plan is not None else None
+
+    def loss_fn(p, batch):
+        if cast_bf16:
+            p = jax.tree.map(
+                lambda a: a.astype(jnp.bfloat16)
+                if (a.dtype == jnp.float32 and a.ndim >= 2) else a,
+                p,
+            )
+        return model.train_loss(p, ctx, batch)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape(grad_accum, a.shape[0] // grad_accum, *a.shape[1:]),
+                batch,
+            )
+
+            def accum(carry, mb):
+                loss_sum, grads = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_sum + l, jax.tree.map(jnp.add, grads, g)), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, gsum), _ = jax.lax.scan(accum, (jnp.float32(0.0), zero), micro)
+            loss = loss_sum / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+        new_params, new_opt, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    if plan is None:
+        return jax.jit(train_step)
+
+    def shardings_for(abstract_params):
+        pspec = plan.param_shardings(abstract_params)
+        ospec = {
+            "m": pspec,
+            "v": pspec,
+            "step": plan.replicated(),
+        }
+        return pspec, ospec
+
+    return train_step, shardings_for
+
+
+def make_compressed_dp_step(model: Model, opt_cfg: OptConfig, mesh, dp_axes):
+    """Manual-DP step: per-shard grads -> int8 stochastic-rounded psum ->
+    identical AdamW update on every shard. Demonstrates the wire-compression
+    path; numerics validated against the exact step in tests."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from .compression import dequantize_int8, quantize_int8
+
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+
+    def step(params, opt_state, batch, key):
+        def local(params, batch, key):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.train_loss(p, None, batch)
+            )(params)
+            leaves, treedef = jax.tree.flatten(grads)
+            keys = jax.random.split(key[0], len(leaves))
+            reduced = []
+            for g, k in zip(leaves, keys):
+                q, scale = quantize_int8(g, k)
+                scale = jax.lax.pmax(scale, dp_axes)
+                q32 = jax.lax.psum(q.astype(jnp.int32), dp_axes)
+                reduced.append((q32.astype(jnp.float32) * scale / n_dp).astype(g.dtype))
+            grads = treedef.unflatten(reduced)
+            loss = jax.lax.pmean(loss, dp_axes)
+            return loss, grads
+
+        pspec = jax.tree.map(lambda _: P(), params)
+        bspec = jax.tree.map(lambda _: P(dp_axes), batch)
+        loss, grads = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(pspec, bspec, P(None)),
+            out_specs=(P(), pspec),
+            check_rep=False,
+        )(params, batch, key[None])
+        new_params, new_opt, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_params, new_opt, dict(metrics, loss=loss)
+
+    return jax.jit(step)

@@ -1,0 +1,117 @@
+"""Attention cores vs a naive dense reference (GQA, causal, windowed,
+decode, distinct v head_dim for MLA)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.models.layers.attention import (
+    chunked_attention,
+    decode_attention,
+    local_attention,
+)
+from repro.models.layers.rope import apply_rope
+
+
+def naive(q, k, v, causal=True, window=0, q_offset=0):
+    b, sq, h, hd = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    g = h // n_kv
+    qq = q.reshape(b, sq, n_kv, g, hd).astype(np.float32)
+    s = np.einsum("bqkgd,bckd->bqkgc", qq, k.astype(np.float32)) * hd**-0.5
+    qpos = q_offset + np.arange(sq)
+    kpos = np.arange(skv)
+    mask = np.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = np.where(mask[None, :, None, None, :], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    o = np.einsum("bqkgc,bckd->bqkgd", p, v.astype(np.float32))
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize(
+    "b,s,h,kv,hd,causal",
+    [(2, 37, 4, 2, 16, True), (1, 128, 8, 8, 8, True),
+     (2, 64, 4, 1, 16, False), (1, 200, 6, 3, 32, True)],
+)
+def test_chunked_attention(b, s, h, kv, hd, causal):
+    q = RNG.standard_normal((b, s, h, hd)).astype(np.float32)
+    k = RNG.standard_normal((b, s, kv, hd)).astype(np.float32)
+    v = RNG.standard_normal((b, s, kv, hd)).astype(np.float32)
+    out = chunked_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=causal, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), naive(q, k, v, causal=causal),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_attention_distinct_v_dim():
+    b, s, h, kv, hd, hdv = 2, 40, 4, 2, 24, 16
+    q = RNG.standard_normal((b, s, h, hd)).astype(np.float32)
+    k = RNG.standard_normal((b, s, kv, hd)).astype(np.float32)
+    v = RNG.standard_normal((b, s, kv, hdv)).astype(np.float32)
+    out = chunked_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            block_q=16, block_k=16)
+    assert out.shape == (b, s, h, hdv)
+    np.testing.assert_allclose(np.asarray(out), naive(q, k, v), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "b,s,w,blk", [(2, 100, 16, 16), (1, 256, 64, 32), (2, 77, 24, 32), (1, 64, 200, 16)]
+)
+def test_local_attention(b, s, w, blk):
+    h, kv, hd = 4, 2, 16
+    q = RNG.standard_normal((b, s, h, hd)).astype(np.float32)
+    k = RNG.standard_normal((b, s, kv, hd)).astype(np.float32)
+    v = RNG.standard_normal((b, s, kv, hd)).astype(np.float32)
+    out = local_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          window=w, block=blk)
+    np.testing.assert_allclose(np.asarray(out), naive(q, k, v, causal=True, window=w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_lengths_and_window():
+    b, L, h, kv, hd = 3, 64, 4, 2, 16
+    q = RNG.standard_normal((b, 1, h, hd)).astype(np.float32)
+    kc = RNG.standard_normal((b, L, kv, hd)).astype(np.float32)
+    vc = RNG.standard_normal((b, L, kv, hd)).astype(np.float32)
+    lengths = np.array([10, 64, 33])
+    out = decode_attention(jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc),
+                           jnp.asarray(lengths))
+    outw = decode_attention(jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc),
+                            jnp.asarray(lengths), window=8)
+    for i in range(b):
+        ref = naive(q[i:i+1], kc[i:i+1, :lengths[i]], vc[i:i+1, :lengths[i]], causal=False)
+        np.testing.assert_allclose(np.asarray(out)[i, 0], ref[0, 0], rtol=1e-5, atol=1e-5)
+        lo = max(0, lengths[i] - 8)
+        refw = naive(q[i:i+1], kc[i:i+1, lo:lengths[i]], vc[i:i+1, lo:lengths[i]], causal=False)
+        np.testing.assert_allclose(np.asarray(outw)[i, 0], refw[0, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_rope_properties():
+    b, s, h, hd = 1, 16, 2, 8
+    x = RNG.standard_normal((b, s, h, hd)).astype(np.float32)
+    pos = np.broadcast_to(np.arange(s), (b, s))
+    out = np.asarray(apply_rope(jnp.asarray(x), jnp.asarray(pos), 10000.0))
+    # rotation preserves norms
+    np.testing.assert_allclose(
+        np.linalg.norm(out, axis=-1), np.linalg.norm(x, axis=-1), rtol=1e-5
+    )
+    # position 0 is identity
+    np.testing.assert_allclose(out[:, 0], x[:, 0], rtol=1e-6)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = RNG.standard_normal((1, 1, 1, hd)).astype(np.float32)
+    k = RNG.standard_normal((1, 1, 1, hd)).astype(np.float32)
+
+    def dot(i, j):
+        qi = apply_rope(jnp.asarray(q), jnp.full((1, 1), i), 10000.0)
+        kj = apply_rope(jnp.asarray(k), jnp.full((1, 1), j), 10000.0)
+        return float(np.asarray(qi[0, 0, 0] @ kj[0, 0, 0].T))
+
+    np.testing.assert_allclose(dot(5, 3), dot(12, 10), rtol=1e-4)

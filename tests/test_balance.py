@@ -1,0 +1,59 @@
+"""Load balancing (§4.4.4): Example 4.10 golden + balance properties."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import balanced_blocks, greedy_assign, pair_work_per_unit
+from repro.core.prefix import Level
+
+
+def test_example_410_k2():
+    """5 items at level 1, 3 threads -> T = {4, 3, 3}."""
+    level = Level(
+        k=1,
+        itemsets=np.arange(5, dtype=np.int32)[:, None],
+        counts=np.ones(5, np.int64),
+        bits=None,
+    )
+    work = pair_work_per_unit(level.itemsets)
+    assert work.tolist() == [4, 3, 2, 1, 0]
+    _, loads = greedy_assign(work, 3)
+    assert loads.tolist() == [4, 3, 3]
+
+
+def test_example_410_k3():
+    """9 2-itemsets in prefix groups of sizes 4/3/2 -> group work {6,3,1},
+    3 threads -> T = {6, 3, 1}."""
+    its = np.array(
+        [[0, 1], [0, 2], [0, 3], [0, 4], [1, 2], [1, 3], [1, 4], [2, 3], [2, 4]],
+        dtype=np.int32,
+    )
+    level = Level(k=2, itemsets=its, counts=np.ones(9, np.int64), bits=None)
+    work = pair_work_per_unit(level.itemsets)
+    assert work.tolist() == [6, 3, 1]
+    _, loads = greedy_assign(work, 3)
+    assert loads.tolist() == [6, 3, 1]
+
+
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=200), st.integers(1, 16))
+@settings(max_examples=50, deadline=None)
+def test_greedy_assign_properties(work, t):
+    work = np.asarray(work)
+    assignment, loads = greedy_assign(work, t)
+    # conservation
+    assert loads.sum() == work.sum()
+    for w in range(t):
+        assert loads[w] == work[assignment == w].sum()
+    # greedy bound: max load <= ideal + max unit
+    if work.sum() > 0:
+        assert loads.max() <= work.sum() / t + work.max()
+
+
+@given(st.integers(0, 10_000), st.integers(1, 512))
+@settings(max_examples=100, deadline=None)
+def test_balanced_blocks(m, shards):
+    padded, block = balanced_blocks(m, shards)
+    assert padded % shards == 0
+    assert padded >= m
+    assert block * shards == padded
+    assert padded - m < shards * max(block, 1)

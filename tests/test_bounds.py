@@ -1,0 +1,75 @@
+"""Lemma 4.6 / Corollary 4.7 soundness: a bound-pruned pair is never
+τ-infrequent (the bounds may only skip intersections whose result would have
+been discarded)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import itemize
+
+
+@given(
+    st.integers(8, 40), st.integers(3, 6), st.integers(2, 5),
+    st.integers(0, 10_000), st.integers(1, 3),
+)
+@settings(max_examples=60, deadline=None)
+def test_lemma_46_soundness(n, m, dom, seed, tau):
+    """Direct statement: |R_I ∩ R_a| + |R_I ∩ R_b| > |R_I| + tau
+    implies |R_{I∪{a,b}}| > tau."""
+    rng = np.random.default_rng(seed)
+    D = rng.integers(0, dom, size=(n, m))
+    t = itemize(D)
+    full = np.full(t.n_words, 0xFFFFFFFF, dtype=np.uint32)
+    tail = n % 32
+    if tail:
+        full[-1] = np.uint32((1 << tail) - 1)
+
+    def rows(ids):
+        mask = full
+        for i in ids:
+            mask = mask & t.bits[i]
+        return mask
+
+    def card(mask):
+        return int(np.bitwise_count(mask).sum())
+
+    items = rng.choice(t.n_items, size=min(4, t.n_items), replace=False)
+    if len(items) < 3:
+        return
+    I = tuple(items[:-2])
+    a, b = int(items[-2]), int(items[-1])
+    RI = rows(I)
+    lhs = card(RI & t.bits[a]) + card(RI & t.bits[b])
+    if lhs > card(RI) + tau:
+        assert card(RI & t.bits[a] & t.bits[b]) > tau
+
+
+@given(st.integers(8, 40), st.integers(4, 6), st.integers(2, 4), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_corollary_47_soundness(n, m, dom, seed):
+    """Γ0 > min(Γ1, Γ2) + tau implies the k-itemset is not tau-infrequent."""
+    tau = 1
+    rng = np.random.default_rng(seed)
+    D = rng.integers(0, dom, size=(n, m))
+    t = itemize(D)
+    full = np.full(t.n_words, 0xFFFFFFFF, dtype=np.uint32)
+    tail = n % 32
+    if tail:
+        full[-1] = np.uint32((1 << tail) - 1)
+
+    def card(ids):
+        mask = full
+        for i in ids:
+            mask = mask & t.bits[i]
+        return int(np.bitwise_count(mask).sum())
+
+    k = 4
+    if t.n_items < k:
+        return
+    a = rng.choice(t.n_items, size=k, replace=False).tolist()
+    prefix = a[: k - 3]
+    g0 = card(prefix + [a[-2], a[-1]])
+    g1 = card(prefix + [a[-2]]) - card(prefix + [a[-3], a[-2]])
+    g2 = card(prefix + [a[-1]]) - card(prefix + [a[-3], a[-1]])
+    if g0 > min(g1, g2) + tau:
+        assert card(a) > tau

@@ -1,0 +1,90 @@
+"""int8 gradient compression: unbiasedness, bounded error, and the
+compressed-DP train step (subprocess with 8 devices)."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.training.compression import dequantize_int8, quantize_int8
+
+
+def test_quantization_unbiased():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(0), 256)
+    qs = []
+    for k in keys:
+        q, scale = quantize_int8(g, k)
+        qs.append(dequantize_int8(q, scale))
+    mean = np.mean(np.stack(qs), axis=0)
+    scale = float(np.abs(np.asarray(g)).max() / 127.0)
+    # stochastic rounding is unbiased: mean error << one quantization step
+    np.testing.assert_allclose(mean, np.asarray(g), atol=scale * 0.35)
+
+
+def test_quantization_error_bounded():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32) * 5)
+    q, scale = quantize_int8(g, jax.random.PRNGKey(1))
+    back = dequantize_int8(q, scale)
+    assert float(jnp.abs(back - g).max()) <= float(scale) * 1.0001
+
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import ARCHS, reduced
+from repro.models.zoo import build
+from repro.training.optimizer import OptConfig, adamw_init
+from repro.training.train import make_train_step, make_compressed_dp_step
+
+cfg = reduced(ARCHS["glm4-9b"])
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt = adamw_init(params)
+rng = np.random.default_rng(0)
+B, S = 8, 16
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+ocfg = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+
+exact = make_train_step(model, ocfg)
+p1, o1, m1 = exact(params, opt, batch)
+
+mesh = jax.make_mesh((8, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+comp = make_compressed_dp_step(model, ocfg, mesh, ("data",))
+p2, o2, m2 = comp(params, opt, batch, jax.random.PRNGKey(42))
+
+# losses identical (loss is computed before compression)
+assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4, (m1["loss"], m2["loss"])
+# parameters close: int8 grads perturb the update slightly but boundedly
+diffs = [float(jnp.abs(a - b).max())
+         for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))]
+assert max(diffs) < 5e-3, max(diffs)
+# and the update actually moved the params
+moved = [float(jnp.abs(a - b).max())
+         for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))]
+assert max(moved) > 1e-6
+print("COMPRESSED_OK", max(diffs))
+"""
+
+
+@pytest.mark.slow
+def test_compressed_dp_step_8dev():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, src],
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "COMPRESSED_OK" in proc.stdout

@@ -1,0 +1,61 @@
+"""Elasticity: restore a checkpoint onto a different mesh (subprocess)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, tempfile
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import ARCHS, reduced
+from repro.models.zoo import build
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.elastic import redistribute, mesh_fingerprint
+from repro.distributed.sharding import make_plan
+
+cfg = reduced(ARCHS["glm4-9b"])
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+with tempfile.TemporaryDirectory() as d:
+    cm = CheckpointManager(d)
+    cm.save(1, {"params": jax.tree.map(np.asarray, params)}, {"arch": cfg.name})
+    tree, meta = cm.restore()
+
+    # "restart" on two different meshes; forward result must be identical
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)), jnp.int32)
+    batch = {"tokens": tokens, "labels": labels}
+    losses = []
+    for shape in [(4, 2), (2, 2)]:
+        mesh = jax.make_mesh(shape, ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        plan = make_plan(mesh)
+        print(mesh_fingerprint(mesh))
+        p = redistribute(tree["params"], plan, kind="params")
+        with jax.set_mesh(mesh):
+            loss = jax.jit(lambda pp, b: model.train_loss(pp, plan.ctx(), b))(p, batch)
+        losses.append(float(loss))
+    ref = float(jax.jit(lambda pp, b: model.train_loss(pp, None, b))(params, batch))
+    for l in losses:
+        assert abs(l - ref) < 2e-3, (l, ref)
+print("ELASTIC_OK")
+"""
+
+
+@pytest.mark.slow
+def test_elastic_restore_different_mesh():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, src],
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "ELASTIC_OK" in proc.stdout

@@ -1,0 +1,73 @@
+"""Itemization + bitset primitives (paper §3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import itemize, bits_popcount, bits_to_rows, pack_rows_to_bits
+
+
+def paper_example_36():
+    return np.array([[1, 2, 3, 4], [1, 2, 7, 4], [1, 6, 3, 4], [5, 2, 3, 4]])
+
+
+def test_example_36_items():
+    """Golden test: Example 3.6's I_A, delta_A, U_A."""
+    t = itemize(paper_example_36())
+    assert t.n_items == 7
+    got = {(int(t.value[i]), int(t.col[i]) + 1, tuple(t.rows_of(i) + 1)) for i in range(7)}
+    expected = {
+        (1, 1, (1, 2, 3)), (2, 2, (1, 2, 4)), (3, 3, (1, 3, 4)),
+        (4, 4, (1, 2, 3, 4)), (5, 1, (4,)), (6, 2, (3,)), (7, 3, (2,)),
+    }
+    assert got == expected
+    uniques = {i for i in range(7) if t.freq[i] == 1}
+    assert {(int(t.value[i]), int(t.col[i]) + 1) for i in uniques} == {(5, 1), (6, 2), (7, 3)}
+    uniform = {i for i in range(7) if t.freq[i] == t.n_rows}
+    assert {(int(t.value[i]), int(t.col[i]) + 1) for i in uniform} == {(4, 4)}
+
+
+dataset_st = st.integers(1, 40).flatmap(
+    lambda n: st.integers(1, 6).flatmap(
+        lambda m: st.lists(
+            st.lists(st.integers(0, 5), min_size=m, max_size=m),
+            min_size=n, max_size=n,
+        )
+    )
+)
+
+
+@given(dataset_st)
+@settings(max_examples=50, deadline=None)
+def test_itemize_properties(rows):
+    D = np.asarray(rows)
+    t = itemize(D)
+    n, m = D.shape
+    # every (col, value) pair appears exactly once
+    pairs = list(zip(t.col.tolist(), t.value.tolist()))
+    assert len(pairs) == len(set(pairs))
+    # frequencies sum to n per column; bitsets match frequency and rows
+    for j in range(m):
+        items_j = np.nonzero(t.col == j)[0]
+        assert t.freq[items_j].sum() == n
+    pc = bits_popcount(t.bits)
+    assert np.array_equal(pc, t.freq)
+    for i in range(t.n_items):
+        rows_i = t.rows_of(i)
+        assert np.array_equal(D[rows_i, t.col[i]], np.full(len(rows_i), t.value[i]))
+        assert t.min_row[i] == rows_i[0]
+
+
+def test_pack_rows_roundtrip():
+    rng = np.random.default_rng(0)
+    n = 100
+    sets = [np.sort(rng.choice(n, size=rng.integers(0, n), replace=False)) for _ in range(20)]
+    bits = pack_rows_to_bits(sets, n)
+    for i, s in enumerate(sets):
+        assert np.array_equal(bits_to_rows(bits[i]), s)
+    assert np.array_equal(bits_popcount(bits), [len(s) for s in sets])
+
+
+def test_itemize_rejects_bad_shape():
+    with pytest.raises(ValueError):
+        itemize(np.zeros(5))

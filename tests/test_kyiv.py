@@ -1,0 +1,154 @@
+"""Algorithm 1 end-to-end: paper golden traces + oracle/MINIT agreement."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    KyivConfig,
+    brute_force_minimal_infrequent,
+    mine,
+    minit_minimal_infrequent,
+)
+
+
+def paper_example_48():
+    """Example 4.8 dataset; * entries are globally unique values."""
+    u = [100]
+
+    def star():
+        u[0] += 1
+        return u[0]
+
+    return np.array(
+        [
+            [star(), star(), star(), 4, star()],
+            [1, 2, star(), 4, star()],
+            [1, 2, 3, 4, star()],
+            [1, 2, 3, 4, 5],
+            [1, star(), 3, star(), 5],
+            [star(), 2, 3, star(), 5],
+            [star(), star(), star(), star(), 5],
+        ]
+    )
+
+
+def test_example_48_results():
+    """Golden: Kyiv prints {d,e} at k=2 and {a,b,e} at k=3 (values/cols)."""
+    res = mine(paper_example_48(), KyivConfig(tau=1, kmax=3))
+    multi = {s for s, _ in res.as_value_sets() if len(s) > 1}
+    assert multi == {
+        ((3, 4), (4, 5)),  # {d, e}: value 4 in col 4, value 5 in col 5
+        ((0, 1), (1, 2), (4, 5)),  # {a, b, e}
+    }
+
+
+def test_example_48_pruning_trace():
+    """Golden: at k=3 the paper reports 10 candidate pairs, 3 pruned by the
+    support test, 4 by Lemma 4.6, 2 by Corollary 4.7, 1 intersection."""
+    res = mine(paper_example_48(), KyivConfig(tau=1, kmax=3))
+    s3 = [s for s in res.stats if s.k == 3][0]
+    assert s3.candidates == 10
+    assert s3.support_pruned == 3
+    assert s3.bound_pruned == 6  # lemma(4) + corollary(2)
+    assert s3.intersections == 1
+    assert s3.emitted == 1
+    # without bounds, the same 6 pairs cost intersections instead
+    res_nb = mine(paper_example_48(), KyivConfig(tau=1, kmax=3, use_bounds=False))
+    s3nb = [s for s in res_nb.stats if s.k == 3][0]
+    assert s3nb.intersections == 7
+    assert {i for i, _ in res_nb.itemsets} == {i for i, _ in res.itemsets}
+
+
+dataset_st = st.tuples(
+    st.integers(5, 25), st.integers(2, 5), st.integers(2, 5), st.integers(0, 10_000)
+)
+
+
+@given(dataset_st, st.integers(1, 3), st.integers(2, 4))
+@settings(max_examples=40, deadline=None)
+def test_kyiv_equals_oracle(dims, tau, kmax):
+    n, m, dom, seed = dims
+    D = np.random.default_rng(seed).integers(0, dom, size=(n, m))
+    oracle = brute_force_minimal_infrequent(D, tau, kmax)
+    got = mine(D, KyivConfig(tau=tau, kmax=kmax)).canonical_set()
+    assert got == oracle
+
+
+@given(dataset_st, st.integers(1, 2), st.integers(2, 4))
+@settings(max_examples=25, deadline=None)
+def test_minit_equals_oracle(dims, tau, kmax):
+    n, m, dom, seed = dims
+    D = np.random.default_rng(seed).integers(0, dom, size=(n, m))
+    oracle = brute_force_minimal_infrequent(D, tau, kmax)
+    assert minit_minimal_infrequent(D, tau, kmax) == oracle
+
+
+@given(dataset_st)
+@settings(max_examples=25, deadline=None)
+def test_orderings_agree(dims):
+    """§5.2.4: ordering changes work done, never the result set."""
+    n, m, dom, seed = dims
+    D = np.random.default_rng(seed).integers(0, dom, size=(n, m))
+    results = {
+        o: mine(D, KyivConfig(tau=2, kmax=3, ordering=o, seed=7)).canonical_set()
+        for o in ("ascending", "descending", "random")
+    }
+    assert results["ascending"] == results["descending"] == results["random"]
+
+
+@given(dataset_st, st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_bounds_do_not_change_results(dims, tau):
+    n, m, dom, seed = dims
+    D = np.random.default_rng(seed).integers(0, dom, size=(n, m))
+    with_b = mine(D, KyivConfig(tau=tau, kmax=4, use_bounds=True))
+    without = mine(D, KyivConfig(tau=tau, kmax=4, use_bounds=False))
+    assert with_b.canonical_set() == without.canonical_set()
+    # bounds only ever remove intersections
+    for sb, sn in zip(with_b.stats, without.stats):
+        assert sb.intersections <= sn.intersections
+
+
+@given(dataset_st)
+@settings(max_examples=20, deadline=None)
+def test_output_invariants(dims):
+    """Every emitted itemset is tau-infrequent and minimal (Def. 3.7)."""
+    n, m, dom, seed = dims
+    tau = 2
+    D = np.random.default_rng(seed).integers(0, dom, size=(n, m))
+    res = mine(D, KyivConfig(tau=tau, kmax=3))
+    t = res.prep.table
+    full = np.full(t.n_words, 0xFFFFFFFF, dtype=np.uint32)
+    tail = t.n_rows % 32
+    if tail:
+        full[-1] = np.uint32((1 << tail) - 1)
+
+    def freq(ids):
+        mask = full
+        for i in ids:
+            mask = mask & t.bits[i]
+        return int(np.bitwise_count(mask).sum())
+
+    seen = set()
+    for ids, cnt in res.itemsets:
+        assert ids not in seen, "duplicate emission"
+        seen.add(ids)
+        f = freq(ids)
+        assert f == cnt
+        assert 0 < f <= tau
+        for drop in range(len(ids)):
+            sub = ids[:drop] + ids[drop + 1 :]
+            if sub:
+                assert freq(sub) > tau, "non-minimal emission"
+
+
+def test_paper_expansion_mode_is_subset():
+    rng = np.random.default_rng(3)
+    # duplicate a column to force mirrors
+    base = rng.integers(0, 3, size=(20, 3))
+    D = np.concatenate([base, base[:, :1]], axis=1)
+    full = mine(D, KyivConfig(tau=1, kmax=3, expansion="full")).canonical_set()
+    paper = mine(D, KyivConfig(tau=1, kmax=3, expansion="paper")).canonical_set()
+    assert paper <= full
+    oracle = brute_force_minimal_infrequent(D, 1, 3)
+    assert full == oracle

@@ -1,0 +1,74 @@
+"""AdamW vs a plain numpy reference; schedule shape; clipping."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update, lr_at
+
+
+def _numpy_adamw(params, grads, m, v, step, cfg, gnorm):
+    scale = min(1.0, cfg.clip_norm / max(gnorm, 1e-9))
+    lr = _lr(cfg, step)
+    out_p, out_m, out_v = {}, {}, {}
+    for k in params:
+        g = grads[k] * scale
+        m_new = cfg.b1 * m[k] + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v[k] + (1 - cfg.b2) * g * g
+        mhat = m_new / (1 - cfg.b1**step)
+        vhat = v_new / (1 - cfg.b2**step)
+        wd = cfg.weight_decay if params[k].ndim >= 2 else 0.0
+        out_p[k] = params[k] - lr * (mhat / (np.sqrt(vhat) + cfg.eps) + wd * params[k])
+        out_m[k], out_v[k] = m_new, v_new
+    return out_p, out_m, out_v
+
+
+def _lr(cfg, step):
+    if step < cfg.warmup_steps:
+        return cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = min(max((step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0), 1)
+    return cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + np.cos(np.pi * prog)))
+
+
+def test_adamw_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    cfg = OptConfig(lr=1e-3, warmup_steps=2, total_steps=100, clip_norm=10.0)
+    params = {"w": rng.standard_normal((4, 5)).astype(np.float32),
+              "b": rng.standard_normal(5).astype(np.float32)}
+    jparams = jax.tree.map(jnp.asarray, params)
+    opt = adamw_init(jparams)
+    m = {k: np.zeros_like(v) for k, v in params.items()}
+    v = {k: np.zeros_like(val) for k, val in params.items()}
+    for step in range(1, 5):
+        grads = {k: rng.standard_normal(val.shape).astype(np.float32)
+                 for k, val in params.items()}
+        gnorm = np.sqrt(sum((g**2).sum() for g in grads.values()))
+        jparams, opt, metrics = adamw_update(
+            jax.tree.map(jnp.asarray, grads), opt, jparams, cfg
+        )
+        params, m, v = _numpy_adamw(params, grads, m, v, step, cfg, gnorm)
+        np.testing.assert_allclose(float(metrics["grad_norm"]), gnorm, rtol=1e-5)
+        np.testing.assert_allclose(float(metrics["lr"]), _lr(cfg, step), rtol=1e-5)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(jparams[k]), params[k],
+                                       rtol=2e-5, atol=2e-6, err_msg=f"{k} step {step}")
+
+
+def test_clipping_engages():
+    cfg = OptConfig(lr=1e-3, clip_norm=0.5, warmup_steps=0, total_steps=10)
+    params = {"w": jnp.ones((3, 3))}
+    opt = adamw_init(params)
+    big = {"w": jnp.full((3, 3), 100.0)}
+    p1, _, m1 = adamw_update(big, opt, params, cfg)
+    small = {"w": jnp.full((3, 3), 100.0) * 0.5 / float(m1["grad_norm"])}
+    p2, _, _ = adamw_update(small, opt, params, cfg)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]), rtol=1e-5)
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert abs(max(lrs) - 1.0) < 0.15
+    assert abs(lrs[-1] - 0.1) < 1e-3
+    assert all(b <= a + 1e-9 for a, b in zip(lrs[2:], lrs[3:]))  # decays after warmup

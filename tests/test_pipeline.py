@@ -1,0 +1,59 @@
+"""Pipeline parallelism: GPipe schedule == sequential stage stack (subprocess
+with a 4-stage mesh), plus bubble-fraction math."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.distributed.pipeline import bubble_fraction
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(1, 8) == 0.0
+    assert abs(bubble_fraction(4, 13) - 3 / 16) < 1e-12
+    assert bubble_fraction(4, 4) == 3 / 7
+
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.distributed.pipeline import pipeline_forward
+
+mesh = jax.make_mesh((4,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,))
+S, D = 4, 16
+rng = np.random.default_rng(0)
+stage_params = {"w": jnp.asarray(rng.standard_normal((S, D, D)), jnp.float32) * 0.3,
+                "b": jnp.asarray(rng.standard_normal((S, D)), jnp.float32) * 0.1}
+
+def stage_fn(p, x):
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+x = jnp.asarray(rng.standard_normal((8 * 4, D)), jnp.float32)  # 8 microbatches
+fwd = pipeline_forward(mesh, stage_fn, n_micro=8)
+with jax.set_mesh(mesh):
+    y = fwd(stage_params, x)
+
+# sequential reference
+ref = x
+for s in range(S):
+    ref = jnp.tanh(ref @ stage_params["w"][s] + stage_params["b"][s])
+np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
+print("PIPELINE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential_4dev():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, src],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "PIPELINE_OK" in proc.stdout

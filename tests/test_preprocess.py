@@ -1,0 +1,83 @@
+"""Pre-processing (§4.1): partition properties, Example 4.3, orderings."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import itemize, preprocess
+
+
+def paper_example_43():
+    return np.array(
+        [[1, 2, 3, 4, 8], [1, 2, 7, 4, 8], [1, 6, 3, 4, 8], [5, 2, 3, 4, 9]]
+    )
+
+
+def test_example_43_partition():
+    t = itemize(paper_example_43())
+    prep = preprocess(t, tau=1)
+    # r_{A,tau} = the four unique items; U_A = {(4, col4)}
+    assert len(prep.infrequent_items) == 4
+    assert len(prep.uniform_items) == 1
+    # L has 3 canonical items; item (8, col5) duplicates (1, col1)'s rows
+    assert prep.n_l == 3
+    mirrors = sum(len(v) for v in prep.mirror_of.values())
+    assert mirrors == 1
+    (canon,) = [c for c, v in prep.mirror_of.items() if v]
+    v, j = t.describe(canon)
+    assert (v, j) == (1, 0)
+    mv, mj = t.describe(prep.mirror_of[canon][0])
+    assert (mv, mj) == (8, 4)
+
+
+dataset_st = st.integers(4, 40).flatmap(
+    lambda n: st.integers(2, 6).flatmap(
+        lambda m: st.lists(
+            st.lists(st.integers(0, 4), min_size=m, max_size=m),
+            min_size=n, max_size=n,
+        )
+    )
+)
+
+
+@given(dataset_st, st.integers(1, 3))
+@settings(max_examples=50, deadline=None)
+def test_partition_properties(rows, tau):
+    D = np.asarray(rows)
+    t = itemize(D)
+    prep = preprocess(t, tau=tau)
+    n = t.n_rows
+    # (i) canonical rows pairwise distinct
+    seen = set()
+    for i, it in enumerate(prep.l_items):
+        key = prep.l_bits[i].tobytes()
+        assert key not in seen
+        seen.add(key)
+        # L items are neither uniform nor tau-infrequent
+        assert tau < t.freq[it] < n
+    # (ii) every dropped duplicate maps to a canonical with identical rows
+    for canon, dups in prep.mirror_of.items():
+        for d in dups:
+            assert np.array_equal(t.bits[canon], t.bits[d])
+    # partition covers everything exactly once
+    covered = (
+        set(prep.l_items.tolist())
+        | {d for v in prep.mirror_of.values() for d in v}
+        | set(prep.uniform_items.tolist())
+        | set(prep.infrequent_items.tolist())
+    )
+    assert covered == set(range(t.n_items))
+
+
+@given(dataset_st)
+@settings(max_examples=20, deadline=None)
+def test_ascending_order(rows):
+    D = np.asarray(rows)
+    t = itemize(D)
+    prep = preprocess(t, tau=1, ordering="ascending")
+    f = t.freq[prep.l_items]
+    assert np.all(np.diff(f) >= 0)  # Def 4.5(i)
+    desc = preprocess(t, tau=1, ordering="descending")
+    assert np.all(np.diff(t.freq[desc.l_items]) <= 0)
+    rnd1 = preprocess(t, tau=1, ordering="random", seed=1)
+    rnd2 = preprocess(t, tau=1, ordering="random", seed=1)
+    assert np.array_equal(rnd1.l_items, rnd2.l_items)  # deterministic per seed

@@ -1,0 +1,48 @@
+"""SPMD sharded mining driver == sequential driver, on an 8-device host mesh.
+
+XLA device count must be set before jax initialises, so the multi-device
+check runs in a subprocess.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+import jax
+from repro.core import mine, KyivConfig, itemize, preprocess
+from repro.core.kyiv import mine_preprocessed
+from repro.core.sharded import make_sharded_intersect
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rng = np.random.default_rng(11)
+for word_axis in (None, "model"):
+    fn = make_sharded_intersect(mesh, pair_axes=("data",), word_axis=word_axis)
+    for trial in range(3):
+        D = rng.integers(0, 4, size=(80, 6))
+        cfg = KyivConfig(tau=2, kmax=4)
+        seq = mine(D, cfg).canonical_set()
+        prep = preprocess(itemize(D), cfg.tau)
+        shr = mine_preprocessed(prep, cfg, intersect_fn=fn).canonical_set()
+        assert seq == shr, (word_axis, trial)
+print("SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_equals_sequential_8dev():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, src],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED_OK" in proc.stdout

@@ -1,0 +1,79 @@
+"""ItemsetIndex (the §4.4.1 zero-cost support lookup): exact + hashed paths."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ItemsetIndex
+from repro.core.prefix import Level, generate_candidates, prefix_group_sizes
+
+
+@given(st.integers(2, 40), st.integers(1, 4), st.integers(0, 10_000), st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_index_lookup(t, k, seed, force_hash):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 50, size=(t, k))
+    rows = np.unique(rows, axis=0)
+    rows = rows[np.lexsort(rows.T[::-1])]
+    # force the hash path by lying about symbol count
+    n_symbols = 2**40 if force_hash else 50
+    idx = ItemsetIndex(rows, counts=np.arange(len(rows)), n_symbols=n_symbols)
+    bits = max(1, (n_symbols - 1).bit_length())
+    assert idx.exact == (k * bits <= 64)
+    got = idx.lookup(rows)
+    assert np.array_equal(got, np.arange(len(rows)))
+    # absent queries return -1
+    absent = rows.copy()
+    absent[:, 0] += 100
+    assert np.all(idx.lookup(absent) == -1)
+    cnts = idx.lookup_counts(rows)
+    assert np.array_equal(cnts, np.arange(len(rows)))
+
+
+def test_candidate_generation_matches_bruteforce():
+    rng = np.random.default_rng(1)
+    for trial in range(20):
+        t, k = int(rng.integers(2, 30)), int(rng.integers(1, 4))
+        rows = np.unique(rng.integers(0, 6, size=(t, k)), axis=0)
+        rows = rows[np.lexsort(rows.T[::-1])].astype(np.int32)
+        lvl = Level(k=k, itemsets=rows, counts=np.ones(len(rows), np.int64), bits=None)
+        cand = generate_candidates(lvl)
+        # brute force join
+        expected = set()
+        for i in range(len(rows)):
+            for j in range(i + 1, len(rows)):
+                if np.array_equal(rows[i, : k - 1], rows[j, : k - 1]) and rows[i, k - 1] != rows[j, k - 1]:
+                    expected.add((i, j))
+        got = set(zip(cand.i_idx.tolist(), cand.j_idx.tolist()))
+        assert got == expected
+        # candidates are lexicographically sorted (needed for the next level)
+        its = cand.itemsets
+        for r in range(1, len(its)):
+            assert tuple(its[r - 1]) < tuple(its[r])
+        # group sizes partition the level
+        assert prefix_group_sizes(rows).sum() == len(rows)
+
+
+def test_streamed_batches_equal_single_shot():
+    """iter_candidate_batches (§6.1 level streaming) == generate_candidates."""
+    from repro.core.prefix import iter_candidate_batches
+
+    rng = np.random.default_rng(7)
+    for trial in range(10):
+        t, k = int(rng.integers(4, 60)), int(rng.integers(1, 4))
+        rows = np.unique(rng.integers(0, 7, size=(t, k)), axis=0)
+        rows = rows[np.lexsort(rows.T[::-1])].astype(np.int32)
+        lvl = Level(k=k, itemsets=rows, counts=np.ones(len(rows), np.int64), bits=None)
+        full = generate_candidates(lvl)
+        for budget in (1, 5, 1000):
+            batches = list(iter_candidate_batches(lvl, budget))
+            if full.m == 0:
+                assert batches == []
+                continue
+            i_all = np.concatenate([b.i_idx for b in batches])
+            j_all = np.concatenate([b.j_idx for b in batches])
+            its = np.concatenate([b.itemsets for b in batches], axis=0)
+            assert np.array_equal(i_all, full.i_idx), (trial, budget)
+            assert np.array_equal(j_all, full.j_idx), (trial, budget)
+            assert np.array_equal(its, full.itemsets), (trial, budget)
+            if budget >= full.m:
+                assert len(batches) == 1
