@@ -27,6 +27,7 @@ BENCHES = [
     ("fig11", "bench_fig11_tau"),
     ("fig12", "bench_fig12_memory"),
     ("fig13", "bench_fig13_parallel"),
+    ("fused", "bench_fused_pipeline"),
     ("roofline", "bench_roofline"),
 ]
 

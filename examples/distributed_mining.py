@@ -20,7 +20,7 @@ import jax
 
 from repro.core import KyivConfig, itemize, preprocess
 from repro.core.kyiv import mine_preprocessed
-from repro.core.sharded import make_sharded_intersect
+from repro.core.sharded import make_sharded_pipeline
 from repro.data.synth import randomized_dataset
 from repro.distributed.checkpoint import CheckpointManager
 
@@ -31,9 +31,8 @@ def main() -> None:
     prep = preprocess(itemize(D), cfg.tau)
 
     # --- 8-device run: pairs over data(4), words over model(2) -------------
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    fn = make_sharded_intersect(mesh, pair_axes=("data",), word_axis="model")
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    factory = make_sharded_pipeline(mesh, pair_axes=("data",), word_axis="model")
     with tempfile.TemporaryDirectory() as ckdir:
         cm = CheckpointManager(ckdir)
 
@@ -51,16 +50,15 @@ def main() -> None:
                 raise SimulatedFailure  # "node died" after level 2
 
         try:
-            mine_preprocessed(prep, cfg, intersect_fn=fn, on_level_end=hook)
+            mine_preprocessed(prep, cfg, pipeline_factory=factory, on_level_end=hook)
         except SimulatedFailure:
             print(f"node failure simulated after level 2 "
                   f"(checkpoints: steps {cm.steps()})")
 
         # --- elastic restart: resume on a smaller (2, 2) mesh --------------
-        mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        fn2 = make_sharded_intersect(mesh2, pair_axes=("data",), word_axis="model")
-        res = mine_preprocessed(prep, cfg, intersect_fn=fn2,
+        mesh2 = jax.make_mesh((2, 2), ("data", "model"))
+        factory2 = make_sharded_pipeline(mesh2, pair_axes=("data",), word_axis="model")
+        res = mine_preprocessed(prep, cfg, pipeline_factory=factory2,
                                 resume_state=state_store[2])
         print(f"resumed on 2x2 mesh -> {len(res.itemsets)} minimal "
               f"tau-infrequent itemsets")

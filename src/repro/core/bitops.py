@@ -1,0 +1,39 @@
+"""Host-side popcount with a guarded ``np.bitwise_count`` fallback.
+
+``np.bitwise_count`` landed in numpy 2.0. The fast engines and the item
+table pipeline all popcount uint bitset words on the host; on numpy<2.0 that
+used to raise ``AttributeError`` mid-mine. Here the 2.0 ufunc is used when
+present and an ``unpackbits``-based fallback (exact, just slower) otherwise,
+so the numpy engine degrades gracefully instead of crashing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["HAVE_BITWISE_COUNT", "popcount", "popcount_rows"]
+
+HAVE_BITWISE_COUNT = hasattr(np, "bitwise_count")
+
+
+def popcount_unpackbits(words: np.ndarray) -> np.ndarray:
+    """Elementwise popcount via uint8 view + unpackbits (numpy<2.0 fallback)."""
+    words = np.ascontiguousarray(words)
+    nbytes = words.dtype.itemsize
+    u8 = words.view(np.uint8).reshape(words.shape + (nbytes,))
+    return np.unpackbits(u8, axis=-1).sum(axis=-1, dtype=np.uint8)
+
+
+if HAVE_BITWISE_COUNT:
+
+    def popcount(words: np.ndarray) -> np.ndarray:
+        """Elementwise population count of an unsigned integer array."""
+        return np.bitwise_count(words)
+
+else:
+    popcount = popcount_unpackbits
+
+
+def popcount_rows(bits: np.ndarray) -> np.ndarray:
+    """Per-row popcount of a (..., W) bitset matrix, summed over words (int64)."""
+    return popcount(bits).sum(axis=-1).astype(np.int64)

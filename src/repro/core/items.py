@@ -18,6 +18,8 @@ import dataclasses
 
 import numpy as np
 
+from .bitops import popcount_rows
+
 __all__ = [
     "ItemTable",
     "itemize",
@@ -46,7 +48,7 @@ def pack_rows_to_bits(row_sets: list[np.ndarray], n_rows: int, n_words: int | No
 
 def bits_popcount(bits: np.ndarray) -> np.ndarray:
     """Per-row population count of a (t, W) uint32 bitset matrix."""
-    return np.bitwise_count(bits).sum(axis=-1).astype(np.int64)
+    return popcount_rows(bits)
 
 
 def bits_to_rows(bits_row: np.ndarray) -> np.ndarray:

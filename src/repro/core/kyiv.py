@@ -16,6 +16,22 @@ bound-pruned), type **C** = the rest (intersection performed).
 The driver is host-orchestrated (level control flow) with device-bulk
 intersections — the same split the paper uses (Java control, hot loop on
 rows), adapted so the hot loop is a TPU kernel.
+
+**Fused classify contract** (``KyivConfig.fused_classify``, default on):
+steps 4 and 5 run as *one* device pass. Each level builds a
+``repro.kernels.intersect.LevelPipeline`` that holds the parent bitsets and
+popcounts device-resident; every candidate batch is dispatched
+asynchronously and returns ``(child, counts, classes)`` where ``classes`` is
+the per-pair code CLASS_SKIP / CLASS_EMIT / CLASS_STORE computed in VMEM
+(Alg. 1 lines 32-41) by the fused kernels. Host code then only gathers the
+emitted rows (``classes == CLASS_EMIT``) and concatenates stored children
+(``classes == CLASS_STORE``) — it never re-derives the masks from counts.
+Batches are double-buffered: candidate generation, support tests and bound
+pruning of batch *n+1* overlap the device intersection of batch *n*; the
+only synchronisation point is ``BatchHandle.result()`` on the previous
+batch. With ``fused_classify=False`` the driver falls back to host
+classification (the pre-fusion path, kept as the benchmark baseline); both
+paths are bit-identical on results and stats (see tests/test_fused_classify.py).
 """
 
 from __future__ import annotations
@@ -27,7 +43,12 @@ from typing import Any, Callable
 
 import numpy as np
 
-from ..kernels.intersect import intersect_and_count
+from ..kernels.intersect import (
+    CLASS_EMIT,
+    CLASS_STORE,
+    LegacyIntersectPipeline,
+    LevelPipeline,
+)
 from .items import ItemTable, itemize
 from .preprocess import Preprocessed, preprocess
 from .prefix import CandidateBatch, Level, iter_candidate_batches
@@ -49,6 +70,9 @@ class KyivConfig:
     expansion: str = "full"  # "full" | "paper" (single-swap, Alg. 1 lines 36-38)
     seed: int = 0  # random-ordering seed
     max_pairs_per_chunk: int = 1 << 22  # level spilling / bucket unit
+    fused_classify: bool = True  # classify (Alg. 1 lines 32-41) on the engine
+    locality_sort: bool = True  # locality-aware pair schedule before dispatch
+    double_buffer: bool = True  # overlap host candidate gen with device batches
 
 
 @dataclasses.dataclass
@@ -62,7 +86,8 @@ class LevelStats:
     skipped_absent_uniform: int = 0
     stored: int = 0
     time_total: float = 0.0
-    time_intersect: float = 0.0
+    time_intersect: float = 0.0  # dispatch + blocking device sync
+    time_classify: float = 0.0  # host-side classification consumption
     level_bytes: int = 0
 
     @property
@@ -106,6 +131,10 @@ class MiningResult:
     @property
     def total_intersect_time(self) -> float:
         return sum(s.time_intersect for s in self.stats)
+
+    @property
+    def total_classify_time(self) -> float:
+        return sum(s.time_classify for s in self.stats)
 
     @property
     def peak_level_bytes(self) -> int:
@@ -158,29 +187,38 @@ def mine_preprocessed(
     config: KyivConfig,
     *,
     intersect_fn: Callable[..., Any] | None = None,
+    pipeline_factory: Callable[..., Any] | None = None,
     on_level_end: Callable[[int, dict[str, Any]], None] | None = None,
     resume_state: dict[str, Any] | None = None,
 ) -> MiningResult:
     """Run Algorithm 1 on a preprocessed item table.
 
-    ``intersect_fn`` allows the sharded driver to substitute a distributed
-    intersection; ``on_level_end`` is the checkpoint hook; ``resume_state``
-    (from a checkpoint) restarts at a level boundary.
+    ``pipeline_factory(bits, parent_counts, tau)`` builds the per-level batch
+    pipeline (``repro.core.sharded.make_sharded_pipeline`` supplies a
+    distributed one); ``intersect_fn(bits, pairs, write_children)`` is the
+    older injection contract, adapted with host-side classification.
+    ``on_level_end`` is the checkpoint hook; ``resume_state`` (from a
+    checkpoint) restarts at a level boundary.
     """
     t_start = time.perf_counter()
     table = prep.table
     tau, kmax = config.tau, config.kmax
     n = table.n_rows
-    do_intersect = intersect_fn or (
-        lambda bits, pairs, write_children: intersect_and_count(
+    if pipeline_factory is not None:
+        make_pipeline = pipeline_factory
+    elif intersect_fn is not None:
+        make_pipeline = lambda bits, counts, tau_: LegacyIntersectPipeline(intersect_fn, bits)
+    else:
+        make_pipeline = lambda bits, counts, tau_: LevelPipeline(
             bits,
-            pairs,
-            write_children=write_children,
+            counts,
+            tau=tau_,
             engine=config.engine,
             interpret=config.interpret,
             indexed=config.indexed_kernel,
+            fused_classify=config.fused_classify,
+            locality_sort=config.locality_sort,
         )
-    )
 
     results: list[tuple[tuple[int, ...], int]] = []
     stats: list[LevelStats] = []
@@ -229,6 +267,66 @@ def mine_preprocessed(
         batch_pairs = min(config.max_pairs_per_chunk, batch_cap)
 
         new_itemsets, new_counts, new_bits = [], [], []
+        pipe = make_pipeline(level.bits, level.counts, tau)
+
+        def consume(entry):
+            """Block on a dispatched batch and consume its classified output."""
+            sel_itemsets, pairs, handle = entry
+            it0 = time.perf_counter()
+            child, counts, classes = handle.result()
+            ls.time_intersect += time.perf_counter() - it0
+
+            ct0 = time.perf_counter()
+            if classes is None:
+                # host classification (legacy intersect_fn / fused_classify=False)
+                ci = level.counts[pairs[:, 0]]
+                cj = level.counts[pairs[:, 1]]
+                minp = np.minimum(ci, cj)
+                absent_uniform = (counts == 0) | (counts == minp)
+                infrequent = (~absent_uniform) & (counts <= tau)
+                store = (~absent_uniform) & (~infrequent)
+                inf_rows = np.nonzero(infrequent)[0]
+                n_skipped = int(absent_uniform.sum())
+            else:
+                # fused path: the engine already classified every pair
+                inf_rows = np.nonzero(classes == CLASS_EMIT)[0]
+                store = classes == CLASS_STORE
+                n_skipped = len(classes) - len(inf_rows) - int(store.sum())
+            ls.time_classify += time.perf_counter() - ct0
+            ls.skipped_absent_uniform += n_skipped
+
+            if len(inf_rows):
+                # vectorised emission: one gather for all found itemsets;
+                # the per-item mirror expansion only runs for itemsets that
+                # actually touch a duplicate-rowset item (rare).
+                ids_mat = prep.l_items[sel_itemsets[inf_rows]]  # (r, k)
+                ids_mat = np.sort(ids_mat, axis=1)  # canonical ascending ids
+                cnts = counts[inf_rows]
+                if prep.mirror_of:
+                    mirror_items = np.fromiter(prep.mirror_of.keys(), dtype=np.int64)
+                    has_mirror = np.isin(ids_mat, mirror_items).any(axis=1)
+                else:
+                    has_mirror = np.zeros(len(inf_rows), dtype=bool)
+                plain = ~has_mirror
+                results.extend(
+                    zip(map(tuple, ids_mat[plain].tolist()), cnts[plain].tolist())
+                )
+                for r in np.nonzero(has_mirror)[0]:
+                    results.extend(
+                        _expand_mirrors(tuple(ids_mat[r].tolist()), int(cnts[r]),
+                                        prep.mirror_of, config.expansion)
+                    )
+                ls.emitted += len(inf_rows)
+
+            if write_children and store.any():
+                rows = np.nonzero(store)[0]
+                new_itemsets.append(sel_itemsets[rows])
+                new_counts.append(counts[rows])
+                new_bits.append(child[rows])
+
+        # double-buffered batch pipeline: batch n intersects on device while
+        # batch n+1 is generated, support-tested and bound-pruned on the host.
+        pending = None
         for cand in iter_candidate_batches(level, batch_pairs):
             ls.candidates += cand.m
 
@@ -252,46 +350,17 @@ def mine_preprocessed(
                 continue
             pairs = np.stack([cand.i_idx[sel], cand.j_idx[sel]], axis=1).astype(np.int32)
             it0 = time.perf_counter()
-            child, counts = do_intersect(level.bits, pairs, write_children)
+            handle = pipe.submit(pairs, write_children)  # async dispatch
             ls.time_intersect += time.perf_counter() - it0
-
-            ci = level.counts[pairs[:, 0]]
-            cj = level.counts[pairs[:, 1]]
-            minp = np.minimum(ci, cj)
-            absent_uniform = (counts == 0) | (counts == minp)
-            infrequent = (~absent_uniform) & (counts <= tau)
-            store = (~absent_uniform) & (~infrequent)
-            ls.skipped_absent_uniform += int(absent_uniform.sum())
-
-            inf_rows = np.nonzero(infrequent)[0]
-            if len(inf_rows):
-                # vectorised emission: one gather for all found itemsets;
-                # the per-item mirror expansion only runs for itemsets that
-                # actually touch a duplicate-rowset item (rare).
-                ids_mat = prep.l_items[cand.itemsets[sel[inf_rows]]]  # (r, k)
-                ids_mat = np.sort(ids_mat, axis=1)  # canonical ascending ids
-                cnts = counts[inf_rows]
-                if prep.mirror_of:
-                    mirror_items = np.fromiter(prep.mirror_of.keys(), dtype=np.int64)
-                    has_mirror = np.isin(ids_mat, mirror_items).any(axis=1)
-                else:
-                    has_mirror = np.zeros(len(inf_rows), dtype=bool)
-                plain = ~has_mirror
-                results.extend(
-                    zip(map(tuple, ids_mat[plain].tolist()), cnts[plain].tolist())
-                )
-                for r in np.nonzero(has_mirror)[0]:
-                    results.extend(
-                        _expand_mirrors(tuple(ids_mat[r].tolist()), int(cnts[r]),
-                                        prep.mirror_of, config.expansion)
-                    )
-                ls.emitted += len(inf_rows)
-
-            if write_children and store.any():
-                rows = np.nonzero(store)[0]
-                new_itemsets.append(cand.itemsets[sel[rows]])
-                new_counts.append(counts[rows])
-                new_bits.append(child[rows])
+            entry = (cand.itemsets[sel], pairs, handle)
+            if not config.double_buffer:
+                consume(entry)
+                continue
+            if pending is not None:
+                consume(pending)
+            pending = entry
+        if pending is not None:
+            consume(pending)
 
         if write_children and new_itemsets:
             nxt_itemsets = np.concatenate(new_itemsets, axis=0)

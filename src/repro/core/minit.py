@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from .bitops import popcount
 from .items import itemize
 
 __all__ = ["minit_minimal_infrequent"]
@@ -49,7 +50,7 @@ def minit_minimal_infrequent(dataset: np.ndarray, tau: int, kmax: int) -> set[tu
         m = full_mask
         for it in itemset:
             m = m & bits[it]
-        return int(np.bitwise_count(m).sum())
+        return int(popcount(m).sum())
 
     def is_minimal(itemset: tuple[int, ...]) -> bool:
         if len(itemset) == 1:
@@ -66,10 +67,10 @@ def minit_minimal_infrequent(dataset: np.ndarray, tau: int, kmax: int) -> set[tu
             return
         # local supports in the conditional dataset
         local = []
-        rows_in_mask = int(np.bitwise_count(row_mask).sum())
+        rows_in_mask = int(popcount(row_mask).sum())
         for it in items:
             inter = row_mask & bits[it]
-            c = int(np.bitwise_count(inter).sum())
+            c = int(popcount(inter).sum())
             if c == 0:
                 continue  # absent in conditional dataset
             if c == rows_in_mask and depth > 0:

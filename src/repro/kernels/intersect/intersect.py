@@ -21,6 +21,24 @@ touches HBM. Combined with the Lemma 4.6 / Corollary 4.7 host-side pruning
 this realises (and strengthens) the paper's "avoid the intersection at the
 last level": on TPU the expensive part is the HBM write, and it is gone.
 
+**Fused classify** (`*_classify_*`): the third pipeline stage. On top of the
+AND + popcount, these kernels take the parent popcounts (scalar-prefetch for
+the indexed path, a pre-gathered ``(M, 1)`` min-parent vector for the
+gathered path) plus the threshold ``τ`` and emit a per-pair **class code**
+computed in VMEM on the final word-block of each pair:
+
+  * ``CLASS_SKIP``  (0) — absent (``|R_W| = 0``) or uniform
+    (``|R_W| = min(|R_I|, |R_J|)``), Alg. 1 line 32;
+  * ``CLASS_EMIT``  (1) — minimal τ-infrequent (``0 < |R_W| <= τ``),
+    Alg. 1 lines 34-38;
+  * ``CLASS_STORE`` (2) — survives to level k+1, Alg. 1 line 41.
+
+This moves the driver's per-batch host classification (a ``(M,)`` gather +
+three comparisons + boolean reductions in numpy) into the same VMEM pass
+that already holds the popcount, so the host only receives ``(M,)`` codes it
+can ``nonzero`` directly — the classify contract consumed by
+``repro.core.kyiv`` when ``KyivConfig.fused_classify`` is on.
+
 All kernels run under ``interpret=True`` on CPU for validation; the BlockSpecs
 target real TPU VMEM tiling.
 """
@@ -34,11 +52,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .ref import CLASS_EMIT, CLASS_SKIP, CLASS_STORE
+
 __all__ = [
     "intersect_write_indexed",
     "intersect_count_indexed",
     "intersect_write_gathered",
     "intersect_count_gathered",
+    "intersect_classify_write_indexed",
+    "intersect_classify_count_indexed",
+    "intersect_classify_write_gathered",
+    "intersect_classify_write_gathered_donating",
+    "intersect_classify_count_gathered",
 ]
 
 _LANES = 128  # uint32 lanes per VPU register row
@@ -243,3 +268,314 @@ def intersect_count_gathered(
         interpret=interpret,
     )(a, b)[0]
     return cnt[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Fused intersect + classify (Alg. 1 lines 31-41 in one device pass)
+# ---------------------------------------------------------------------------
+
+
+def _classify_scalar(cnt, minp, tau):
+    """Class code for one accumulated popcount (scalar / (bm,1) tile)."""
+    skip = (cnt == 0) | (cnt == minp)
+    emit = jnp.logical_not(skip) & (cnt <= tau)
+    return jnp.where(skip, CLASS_SKIP, jnp.where(emit, CLASS_EMIT, CLASS_STORE)).astype(
+        jnp.int32
+    )
+
+
+def _classify_write_indexed_kernel(
+    idx_ref, pc_ref, tau_ref, a_ref, b_ref, child_ref, cnt_ref, cls_ref
+):
+    m = pl.program_id(0)
+    j = pl.program_id(1)
+    w = jnp.bitwise_and(a_ref[0, :], b_ref[0, :])
+    child_ref[0, :] = w
+    pc = jnp.sum(jax.lax.population_count(w).astype(jnp.int32))
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[0, 0] = 0
+
+    cnt_ref[0, 0] += pc
+
+    # classification runs once, on the pair's final word-block, when the
+    # accumulated popcount is complete — the codes never leave VMEM/SMEM
+    # until this single int32 store.
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _classify():
+        minp = jnp.minimum(pc_ref[idx_ref[m, 0]], pc_ref[idx_ref[m, 1]])
+        cls_ref[0, 0] = _classify_scalar(cnt_ref[0, 0], minp, tau_ref[0])
+
+
+def _classify_count_indexed_kernel(idx_ref, pc_ref, tau_ref, a_ref, b_ref, cnt_ref, cls_ref):
+    m = pl.program_id(0)
+    j = pl.program_id(1)
+    w = jnp.bitwise_and(a_ref[0, :], b_ref[0, :])
+    pc = jnp.sum(jax.lax.population_count(w).astype(jnp.int32))
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[0, 0] = 0
+
+    cnt_ref[0, 0] += pc
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _classify():
+        minp = jnp.minimum(pc_ref[idx_ref[m, 0]], pc_ref[idx_ref[m, 1]])
+        cls_ref[0, 0] = _classify_scalar(cnt_ref[0, 0], minp, tau_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("block_words", "interpret"))
+def intersect_classify_write_indexed(
+    bits: jax.Array,
+    pairs: jax.Array,
+    parent_counts: jax.Array,
+    tau: jax.Array,
+    *,
+    block_words: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused child + popcount + class code, gather via scalar-prefetch.
+
+    Args:
+      bits: (t, W) uint32 parent-level bitsets in HBM. W % block_words == 0.
+      pairs: (M, 2) int32 row indices.
+      parent_counts: (t,) int32 parent popcounts |R_I| (rides in SMEM).
+      tau: scalar int32 threshold (traced — one executable per bucket).
+    Returns:
+      (child (M, W) uint32, counts (M,) int32, classes (M,) int32)
+    """
+    t, W = bits.shape
+    M = pairs.shape[0]
+    bw = min(block_words, W)
+    if W % bw:
+        raise ValueError(f"W={W} not divisible by block_words={bw}")
+    grid = (M, W // bw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bw), lambda m, j, idx, pc, tau: (idx[m, 0], j)),
+            pl.BlockSpec((1, bw), lambda m, j, idx, pc, tau: (idx[m, 1], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bw), lambda m, j, idx, pc, tau: (m, j)),
+            pl.BlockSpec((1, 1), lambda m, j, idx, pc, tau: (m, 0)),
+            pl.BlockSpec((1, 1), lambda m, j, idx, pc, tau: (m, 0)),
+        ],
+    )
+    child, cnt, cls = pl.pallas_call(
+        _classify_write_indexed_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((M, W), bits.dtype),
+            jax.ShapeDtypeStruct((M, 1), jnp.int32),
+            jax.ShapeDtypeStruct((M, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        pairs.astype(jnp.int32),
+        parent_counts.astype(jnp.int32),
+        jnp.asarray(tau, jnp.int32).reshape(1),
+        bits,
+        bits,
+    )
+    return child, cnt[:, 0], cls[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_words", "interpret"))
+def intersect_classify_count_indexed(
+    bits: jax.Array,
+    pairs: jax.Array,
+    parent_counts: jax.Array,
+    tau: jax.Array,
+    *,
+    block_words: int = 2048,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused count-only k=k_max path: (counts, classes), no HBM child write."""
+    t, W = bits.shape
+    M = pairs.shape[0]
+    bw = min(block_words, W)
+    if W % bw:
+        raise ValueError(f"W={W} not divisible by block_words={bw}")
+    grid = (M, W // bw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bw), lambda m, j, idx, pc, tau: (idx[m, 0], j)),
+            pl.BlockSpec((1, bw), lambda m, j, idx, pc, tau: (idx[m, 1], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda m, j, idx, pc, tau: (m, 0)),
+            pl.BlockSpec((1, 1), lambda m, j, idx, pc, tau: (m, 0)),
+        ],
+    )
+    cnt, cls = pl.pallas_call(
+        _classify_count_indexed_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((M, 1), jnp.int32),
+            jax.ShapeDtypeStruct((M, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        pairs.astype(jnp.int32),
+        parent_counts.astype(jnp.int32),
+        jnp.asarray(tau, jnp.int32).reshape(1),
+        bits,
+        bits,
+    )
+    return cnt[:, 0], cls[:, 0]
+
+
+def _classify_write_gathered_kernel(tau_ref, a_ref, b_ref, minp_ref, child_ref, cnt_ref, cls_ref):
+    j = pl.program_id(1)
+    w = jnp.bitwise_and(a_ref[...], b_ref[...])
+    child_ref[...] = w
+    pc = jnp.sum(jax.lax.population_count(w).astype(jnp.int32), axis=1, keepdims=True)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    cnt_ref[...] += pc
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _classify():
+        cls_ref[...] = _classify_scalar(cnt_ref[...], minp_ref[...], tau_ref[0])
+
+
+def _classify_count_gathered_kernel(tau_ref, a_ref, b_ref, minp_ref, cnt_ref, cls_ref):
+    j = pl.program_id(1)
+    w = jnp.bitwise_and(a_ref[...], b_ref[...])
+    pc = jnp.sum(jax.lax.population_count(w).astype(jnp.int32), axis=1, keepdims=True)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    cnt_ref[...] += pc
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _classify():
+        cls_ref[...] = _classify_scalar(cnt_ref[...], minp_ref[...], tau_ref[0])
+
+
+def _intersect_classify_write_gathered(
+    a: jax.Array,
+    b: jax.Array,
+    minp: jax.Array,
+    tau: jax.Array,
+    *,
+    block_pairs: int = 8,
+    block_words: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused AND + popcount + classify over pre-gathered aligned operands.
+
+    ``minp`` is the (M,) int32 per-pair min parent popcount (pre-gathered on
+    the same path that gathered ``a``/``b``).
+    """
+    M, W = a.shape
+    bm = min(block_pairs, M)
+    bw = min(block_words, W)
+    if M % bm or W % bw:
+        raise ValueError(f"(M={M}, W={W}) not divisible by ({bm}, {bw})")
+    grid = (M // bm, W // bw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bw), lambda i, j, tau: (i, j)),
+            pl.BlockSpec((bm, bw), lambda i, j, tau: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, tau: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bw), lambda i, j, tau: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, tau: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, tau: (i, 0)),
+        ],
+    )
+    child, cnt, cls = pl.pallas_call(
+        _classify_write_gathered_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((M, W), a.dtype),
+            jax.ShapeDtypeStruct((M, 1), jnp.int32),
+            jax.ShapeDtypeStruct((M, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(tau, jnp.int32).reshape(1),
+        a,
+        b,
+        minp.astype(jnp.int32).reshape(-1, 1),
+    )
+    return child, cnt[:, 0], cls[:, 0]
+
+
+_CLS_W_GATHERED_STATICS = ("block_pairs", "block_words", "interpret")
+intersect_classify_write_gathered = jax.jit(
+    _intersect_classify_write_gathered, static_argnames=_CLS_W_GATHERED_STATICS
+)
+# Accelerator variant: donating the gathered `a` operand lets XLA alias the
+# (same-shape, same-dtype) child output onto its buffer — the write path then
+# allocates no extra HBM for the children. CPU backends do not support
+# donation (warning + copy), so ops.LevelPipeline selects this variant only
+# on tpu/gpu.
+intersect_classify_write_gathered_donating = jax.jit(
+    _intersect_classify_write_gathered,
+    static_argnames=_CLS_W_GATHERED_STATICS,
+    donate_argnums=(0,),
+)
+
+
+@functools.partial(jax.jit, static_argnames=("block_pairs", "block_words", "interpret"))
+def intersect_classify_count_gathered(
+    a: jax.Array,
+    b: jax.Array,
+    minp: jax.Array,
+    tau: jax.Array,
+    *,
+    block_pairs: int = 8,
+    block_words: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused count-only classify variant over pre-gathered operands."""
+    M, W = a.shape
+    bm = min(block_pairs, M)
+    bw = min(block_words, W)
+    if M % bm or W % bw:
+        raise ValueError(f"(M={M}, W={W}) not divisible by ({bm}, {bw})")
+    grid = (M // bm, W // bw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bw), lambda i, j, tau: (i, j)),
+            pl.BlockSpec((bm, bw), lambda i, j, tau: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, tau: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, 1), lambda i, j, tau: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, tau: (i, 0)),
+        ],
+    )
+    cnt, cls = pl.pallas_call(
+        _classify_count_gathered_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((M, 1), jnp.int32),
+            jax.ShapeDtypeStruct((M, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(tau, jnp.int32).reshape(1),
+        a,
+        b,
+        minp.astype(jnp.int32).reshape(-1, 1),
+    )
+    return cnt[:, 0], cls[:, 0]

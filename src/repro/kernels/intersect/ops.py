@@ -1,21 +1,50 @@
-"""Jit'd public wrappers around the intersection kernels, with engine selection
-and bucket padding.
+"""Jit'd public wrappers around the intersection kernels, engine selection,
+bucket padding, and the device-resident level pipeline.
 
-The mining driver calls :func:`intersect_and_count` with ragged pair lists;
-this module pads to shape buckets (so device executables are reused across
-levels), dispatches to one of the engines and strips padding:
+The mining driver hands this module ragged pair lists; it pads them to shape
+buckets (so device executables are reused across levels and batches),
+dispatches to one of the engines and strips padding:
 
-* ``numpy``  — host vectorised ``np.bitwise_and`` + ``np.bitwise_count``;
-  fastest on this CPU-only container, used by the wall-clock benchmarks.
+* ``numpy``  — host vectorised ``np.bitwise_and`` + popcount (``np.bitwise_count``
+  on numpy>=2.0, an exact ``unpackbits`` fallback otherwise); fastest on this
+  CPU-only container, used by the wall-clock benchmarks.
 * ``jnp``    — the jnp oracle under jit (XLA CPU/TPU).
 * ``pallas`` — the Pallas kernels (``interpret=True`` on CPU; compiled on TPU).
 
-Padding contract: pair index rows added for padding point at row 0 twice; the
-returned arrays are sliced back to the true count, so callers never observe
-padding.
+Two dispatch surfaces:
+
+* :func:`intersect_and_count` / :func:`intersect_classify` — one-shot calls.
+  The ``classify`` variant is the fused path: it also takes the parent
+  popcounts and τ and returns per-pair class codes (``CLASS_SKIP`` /
+  ``CLASS_EMIT`` / ``CLASS_STORE``) computed on the engine, so the driver
+  never re-derives the classification masks on the host.
+* :class:`LevelPipeline` — the batch pipeline used by ``repro.core.kyiv``.
+  It puts the parent bitsets (and popcounts) on device **once per level**,
+  dispatches each batch asynchronously (JAX async dispatch: ``submit``
+  returns a handle immediately, blocking only when ``result()`` converts to
+  numpy), and thereby lets host candidate generation / support tests of
+  batch *n+1* overlap the device intersection of batch *n* when the driver
+  double-buffers. Executables are reused across batches via power-of-two
+  pair buckets; on accelerator backends the gathered write path donates its
+  gathered operand so XLA aliases the child output onto it.
+
+Locality-aware pair scheduling: :func:`locality_order` sorts a batch's pairs
+by ``(i, j)`` so the indexed kernel's scalar-prefetch DMA re-fetches each
+parent row once per *run* of equal ``i`` instead of once per pair; outputs
+are un-permuted before the caller sees them. The default candidate generator
+already emits ``i``-sorted batches, so the common case is a single O(M)
+monotonicity check — the sort only triggers for externally supplied pair
+lists (sharded re-balancing, resumed checkpoints, tests).
+
+Padding contract: pair index rows added for padding point at row 0 twice; a
+self-pair is *uniform* (count == min parent count), so fused classify marks
+padding ``CLASS_SKIP``. All returned arrays are sliced back to the true
+count, so callers never observe padding either way.
 """
 
 from __future__ import annotations
+
+import math
 
 import numpy as np
 
@@ -24,12 +53,40 @@ import jax.numpy as jnp
 
 from . import intersect as _k
 from . import ref as _ref
+from .ref import CLASS_EMIT, CLASS_SKIP, CLASS_STORE
 
-__all__ = ["intersect_and_count", "next_bucket", "ENGINES"]
+__all__ = [
+    "intersect_and_count",
+    "intersect_classify",
+    "classify_counts_host",
+    "locality_order",
+    "next_bucket",
+    "LevelPipeline",
+    "BatchHandle",
+    "ENGINES",
+    "CLASS_SKIP",
+    "CLASS_EMIT",
+    "CLASS_STORE",
+]
 
 ENGINES = ("numpy", "jnp", "pallas")
 
 _MIN_BUCKET = 256
+
+# numpy<2.0 has no bitwise_count; degrade to an exact unpackbits popcount
+# (mirrors repro.core.bitops, duplicated here because kernels must not
+# import core — core imports kernels).
+if hasattr(np, "bitwise_count"):
+
+    def _popcount_rows(words: np.ndarray) -> np.ndarray:
+        return np.bitwise_count(words).sum(axis=-1).astype(np.int64)
+
+else:
+
+    def _popcount_rows(words: np.ndarray) -> np.ndarray:
+        words = np.ascontiguousarray(words)
+        u8 = words.view(np.uint8)
+        return np.unpackbits(u8, axis=-1).sum(axis=-1, dtype=np.int64)
 
 
 def next_bucket(m: int, minimum: int = _MIN_BUCKET) -> int:
@@ -47,6 +104,69 @@ def _pad_pairs(pairs: np.ndarray, bucket: int) -> np.ndarray:
     out = np.zeros((bucket, 2), dtype=pairs.dtype)
     out[:m] = pairs
     return out
+
+
+def _largest_divisor_tile(dim: int, preferred: int) -> int:
+    """Largest tile <= preferred that divides dim, in O(sqrt(dim)).
+
+    The old implementation decremented from ``preferred`` until a divisor was
+    hit — O(dim) for prime word counts (a 4M-word prime spent milliseconds
+    here per dispatch). Fast paths: ``dim <= preferred`` and
+    ``gcd(dim, preferred) == preferred``; otherwise enumerate divisor pairs
+    up to sqrt(dim) and keep the largest <= preferred.
+    """
+    if dim <= preferred:
+        return max(dim, 1)
+    if preferred >= 1 and math.gcd(dim, preferred) == preferred:
+        return preferred
+    best = 1
+    d = 1
+    while d * d <= dim:
+        if dim % d == 0:
+            if d <= preferred and d > best:
+                best = d
+            co = dim // d
+            if co <= preferred and co > best:
+                best = co
+        d += 1
+    return best
+
+
+def locality_order(pairs: np.ndarray) -> tuple[np.ndarray | None, np.ndarray | None]:
+    """Locality-aware pair schedule: stable sort by ``(i, j)``.
+
+    Returns ``(order, inverse)`` such that ``pairs[order]`` is sorted and
+    ``out[inverse]`` restores the caller's order, or ``(None, None)`` when the
+    pairs are already ``i``-monotone (the common case — the prefix-join
+    generator emits sorted batches), so the fast path is one O(M) check.
+    """
+    i = pairs[:, 0]
+    if len(i) < 2 or bool(np.all(i[1:] >= i[:-1])):
+        return None, None
+    order = np.lexsort((pairs[:, 1], i))
+    inverse = np.empty_like(order)
+    inverse[order] = np.arange(len(order), dtype=order.dtype)
+    return order, inverse
+
+
+def classify_counts_host(
+    counts: np.ndarray, minp: np.ndarray, tau: int
+) -> np.ndarray:
+    """Host reference of the device classification (Alg. 1 lines 32-41)."""
+    counts = np.asarray(counts)
+    skip = (counts == 0) | (counts == minp)
+    emit = ~skip & (counts <= tau)
+    return np.where(skip, CLASS_SKIP, np.where(emit, CLASS_EMIT, CLASS_STORE)).astype(
+        np.int32
+    )
+
+
+# Module-level jit wrappers: a fresh ``jax.jit(f)`` per call would re-trace;
+# binding once keeps the executable cache warm across batches and levels.
+_JIT_PAIRS_REF = jax.jit(_ref.intersect_pairs_ref)
+_JIT_COUNT_REF = jax.jit(_ref.intersect_count_ref)
+_JIT_CLASSIFY_REF = jax.jit(_ref.intersect_classify_ref)
+_JIT_CLASSIFY_COUNT_REF = jax.jit(_ref.intersect_classify_count_ref)
 
 
 def intersect_and_count(
@@ -86,7 +206,7 @@ def intersect_and_count(
         a = bits_np[pairs[:, 0]]
         b = bits_np[pairs[:, 1]]
         child = np.bitwise_and(a, b)
-        counts = np.bitwise_count(child).sum(axis=1).astype(np.int64)
+        counts = _popcount_rows(child)
         return (child if write_children else None), counts
 
     pairs = np.asarray(pairs, dtype=np.int32)
@@ -97,9 +217,9 @@ def intersect_and_count(
 
     if engine == "jnp":
         if write_children:
-            child, cnt = jax.jit(_ref.intersect_pairs_ref)(bits_j, pairs_j)
+            child, cnt = _JIT_PAIRS_REF(bits_j, pairs_j)
         else:
-            child, cnt = None, jax.jit(_ref.intersect_count_ref)(bits_j, pairs_j)
+            child, cnt = None, _JIT_COUNT_REF(bits_j, pairs_j)
     else:  # pallas
         W = bits_j.shape[1]
         bw = _largest_divisor_tile(W, block_words)
@@ -134,10 +254,267 @@ def intersect_and_count(
     return child_np, counts
 
 
-def _largest_divisor_tile(dim: int, preferred: int) -> int:
-    """Largest tile <= preferred that divides dim (dims here are powers of two
-    times small factors; fall back to scanning)."""
-    tile = min(preferred, dim)
-    while dim % tile:
-        tile -= 1
-    return max(tile, 1)
+def intersect_classify(
+    bits,
+    pairs: np.ndarray,
+    parent_counts: np.ndarray,
+    *,
+    tau: int,
+    write_children: bool,
+    engine: str = "numpy",
+    interpret: bool = True,
+    indexed: bool = True,
+    block_pairs: int = 8,
+    block_words: int = 512,
+    pad_buckets: bool = True,
+    locality_sort: bool = True,
+):
+    """Fused intersect + classify: one-shot convenience over :class:`LevelPipeline`.
+
+    Returns ``(child | None, counts (M,) int64, classes (M,) int32)`` with
+    classes in {CLASS_SKIP, CLASS_EMIT, CLASS_STORE}.
+    """
+    pipe = LevelPipeline(
+        bits,
+        parent_counts,
+        tau=tau,
+        engine=engine,
+        interpret=interpret,
+        indexed=indexed,
+        block_pairs=block_pairs,
+        block_words=block_words,
+        pad_buckets=pad_buckets,
+        locality_sort=locality_sort,
+        fused_classify=True,
+    )
+    return pipe.submit(pairs, write_children).result()
+
+
+class BatchHandle:
+    """Future-like handle for one dispatched batch.
+
+    ``result()`` blocks (device->host transfer) and returns
+    ``(child | None, counts int64, classes int32 | None)`` in the caller's
+    original pair order.
+    """
+
+    def __init__(self, materialize):
+        self._materialize = materialize
+        self._out = None
+        self._done = False
+
+    def result(self):
+        if not self._done:
+            self._out = self._materialize()
+            self._materialize = None
+            self._done = True
+        return self._out
+
+
+class LevelPipeline:
+    """Device-resident, bucket-padded batch dispatcher for one BFS level.
+
+    Construction uploads the parent bitsets and popcounts once; every
+    ``submit`` then ships only the (tiny) pair list. For the ``jnp`` /
+    ``pallas`` engines ``submit`` returns after the asynchronous dispatch, so
+    the host can generate and support-test the next candidate batch while
+    the device intersects the current one; ``BatchHandle.result()`` is the
+    only synchronisation point. The ``numpy`` engine computes eagerly inside
+    ``submit`` (same contract, no async).
+
+    With ``fused_classify=True`` the per-pair class codes are produced by the
+    engine itself (device classification for jnp/pallas); with ``False`` the
+    handle returns ``classes=None`` and the caller re-derives the masks on
+    the host — kept as the comparison baseline for
+    ``benchmarks/bench_fused_pipeline.py``.
+    """
+
+    def __init__(
+        self,
+        bits,
+        parent_counts,
+        *,
+        tau: int,
+        engine: str = "numpy",
+        interpret: bool = True,
+        indexed: bool = True,
+        fused_classify: bool = True,
+        locality_sort: bool = True,
+        block_pairs: int = 8,
+        block_words: int = 512,
+        pad_buckets: bool = True,
+    ):
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+        self.engine = engine
+        self.tau = int(tau)
+        self.interpret = interpret
+        self.indexed = indexed
+        self.fused_classify = fused_classify
+        self.locality_sort = locality_sort
+        self.block_pairs = block_pairs
+        self.block_words = block_words
+        self.pad_buckets = pad_buckets
+        self.n_words = int(bits.shape[1])
+        if engine == "numpy":
+            self._bits = np.asarray(bits)
+            self._pc = np.asarray(parent_counts, dtype=np.int64)
+        else:
+            # device-resident across every batch of the level
+            self._bits = jnp.asarray(bits)
+            self._pc = jnp.asarray(np.asarray(parent_counts), dtype=jnp.int32)
+            self._tau_dev = jnp.int32(self.tau)
+            # gathered write path: donate the gathered operand on accelerator
+            # backends so the child output aliases its buffer; CPU donation
+            # is unsupported (warning + copy), so gate on backend.
+            self._donate = jax.default_backend() in ("tpu", "gpu")
+
+    # -- host (numpy) engine -------------------------------------------------
+
+    def _submit_numpy(self, pairs: np.ndarray, write_children: bool) -> BatchHandle:
+        a = self._bits[pairs[:, 0]]
+        b = self._bits[pairs[:, 1]]
+        child = np.bitwise_and(a, b)
+        counts = _popcount_rows(child)
+        classes = None
+        if self.fused_classify:
+            minp = np.minimum(self._pc[pairs[:, 0]], self._pc[pairs[:, 1]])
+            classes = classify_counts_host(counts, minp, self.tau)
+        out = (child if write_children else None, counts, classes)
+        return BatchHandle(lambda: out)
+
+    # -- device (jnp / pallas) engines --------------------------------------
+
+    def _dispatch_device(self, padded: np.ndarray, write_children: bool):
+        """Async-dispatch one padded bucket; returns device arrays."""
+        pairs_j = jnp.asarray(padded)
+        if self.engine == "jnp":
+            if self.fused_classify:
+                if write_children:
+                    return _JIT_CLASSIFY_REF(self._bits, pairs_j, self._pc, self._tau_dev)
+                cnt, cls = _JIT_CLASSIFY_COUNT_REF(
+                    self._bits, pairs_j, self._pc, self._tau_dev
+                )
+                return None, cnt, cls
+            if write_children:
+                child, cnt = _JIT_PAIRS_REF(self._bits, pairs_j)
+                return child, cnt, None
+            return None, _JIT_COUNT_REF(self._bits, pairs_j), None
+
+        # pallas
+        bw = _largest_divisor_tile(self.n_words, self.block_words)
+        if self.indexed:
+            if self.fused_classify:
+                if write_children:
+                    return _k.intersect_classify_write_indexed(
+                        self._bits, pairs_j, self._pc, self._tau_dev,
+                        block_words=bw, interpret=self.interpret,
+                    )
+                cnt, cls = _k.intersect_classify_count_indexed(
+                    self._bits, pairs_j, self._pc, self._tau_dev,
+                    block_words=bw, interpret=self.interpret,
+                )
+                return None, cnt, cls
+            if write_children:
+                child, cnt = _k.intersect_write_indexed(
+                    self._bits, pairs_j, block_words=bw, interpret=self.interpret
+                )
+                return child, cnt, None
+            cnt = _k.intersect_count_indexed(
+                self._bits, pairs_j, block_words=bw, interpret=self.interpret
+            )
+            return None, cnt, None
+
+        # gathered pallas path
+        a = self._bits[pairs_j[:, 0]]
+        b = self._bits[pairs_j[:, 1]]
+        bm = _largest_divisor_tile(padded.shape[0], self.block_pairs)
+        if self.fused_classify:
+            minp = jnp.minimum(self._pc[pairs_j[:, 0]], self._pc[pairs_j[:, 1]])
+            if write_children:
+                fn = (
+                    _k.intersect_classify_write_gathered_donating
+                    if self._donate
+                    else _k.intersect_classify_write_gathered
+                )
+                return fn(
+                    a, b, minp, self._tau_dev,
+                    block_pairs=bm, block_words=bw, interpret=self.interpret,
+                )
+            cnt, cls = _k.intersect_classify_count_gathered(
+                a, b, minp, self._tau_dev,
+                block_pairs=bm, block_words=bw, interpret=self.interpret,
+            )
+            return None, cnt, cls
+        if write_children:
+            child, cnt = _k.intersect_write_gathered(
+                a, b, block_pairs=bm, block_words=bw, interpret=self.interpret
+            )
+            return child, cnt, None
+        cnt = _k.intersect_count_gathered(
+            a, b, block_pairs=bm, block_words=bw, interpret=self.interpret
+        )
+        return None, cnt, None
+
+    def submit(self, pairs: np.ndarray, write_children: bool) -> BatchHandle:
+        """Dispatch one batch of pair intersections; non-blocking on device engines."""
+        m = int(pairs.shape[0])
+        if m == 0:
+            W = self.n_words
+            child = np.zeros((0, W), dtype=np.uint32) if write_children else None
+            classes = np.zeros(0, dtype=np.int32) if self.fused_classify else None
+            out = (child, np.zeros(0, dtype=np.int64), classes)
+            return BatchHandle(lambda: out)
+
+        pairs = np.ascontiguousarray(pairs, dtype=np.int32)
+        order = inverse = None
+        if self.locality_sort:
+            order, inverse = locality_order(pairs)
+            if order is not None:
+                pairs = pairs[order]
+
+        if self.engine == "numpy":
+            handle = self._submit_numpy(pairs, write_children)
+            if inverse is None:
+                return handle
+            child, counts, classes = handle.result()
+            out = (
+                child[inverse] if child is not None else None,
+                counts[inverse],
+                classes[inverse] if classes is not None else None,
+            )
+            return BatchHandle(lambda: out)
+
+        bucket = next_bucket(m) if self.pad_buckets else m
+        padded = _pad_pairs(pairs, bucket)
+        child_d, cnt_d, cls_d = self._dispatch_device(padded, write_children)
+
+        def materialize():
+            counts = np.asarray(cnt_d)[:m].astype(np.int64)
+            child = np.asarray(child_d)[:m] if child_d is not None else None
+            classes = np.asarray(cls_d)[:m].astype(np.int32) if cls_d is not None else None
+            if inverse is not None:
+                counts = counts[inverse]
+                if child is not None:
+                    child = child[inverse]
+                if classes is not None:
+                    classes = classes[inverse]
+            return child, counts, classes
+
+        return BatchHandle(materialize)
+
+
+class LegacyIntersectPipeline:
+    """Adapter: wrap an ``intersect_fn(bits, pairs, write_children)`` callable
+    (the pre-pipeline injection contract, still used by the sharded tests) in
+    the pipeline interface. Classification stays on the host
+    (``classes=None``)."""
+
+    def __init__(self, intersect_fn, bits):
+        self._fn = intersect_fn
+        self._bits = bits
+
+    def submit(self, pairs: np.ndarray, write_children: bool) -> BatchHandle:
+        child, counts = self._fn(self._bits, pairs, write_children)
+        out = (child, counts, None)
+        return BatchHandle(lambda: out)

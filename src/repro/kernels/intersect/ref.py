@@ -16,7 +16,21 @@ __all__ = [
     "intersect_count_ref",
     "intersect_gathered_ref",
     "popcount_rows_ref",
+    "classify_counts_ref",
+    "intersect_classify_ref",
+    "intersect_classify_count_ref",
+    "CLASS_SKIP",
+    "CLASS_EMIT",
+    "CLASS_STORE",
 ]
+
+# Per-pair class codes of the fused intersect-classify step (Alg. 1 lines
+# 32-41). SKIP = absent (|R_W| = 0) or uniform (|R_W| = min parent count, so
+# W's row set equals a parent's and W is non-minimal); EMIT = minimal
+# τ-infrequent (0 < |R_W| <= τ); STORE = survives to the next level.
+CLASS_SKIP = 0
+CLASS_EMIT = 1
+CLASS_STORE = 2
 
 
 def popcount_rows_ref(bits: jax.Array) -> jax.Array:
@@ -45,3 +59,36 @@ def intersect_count_ref(bits: jax.Array, pairs: jax.Array) -> jax.Array:
     a = bits[pairs[:, 0]]
     b = bits[pairs[:, 1]]
     return popcount_rows_ref(jnp.bitwise_and(a, b))
+
+
+def classify_counts_ref(counts: jax.Array, minp: jax.Array, tau: jax.Array) -> jax.Array:
+    """Alg. 1 lines 32-41 on device: counts + min parent counts -> class codes.
+
+    ``minp`` is ``min(|R_I|, |R_J|)`` per pair; ``tau`` a scalar (traced, so
+    one executable serves every threshold).
+    """
+    counts = counts.astype(jnp.int32)
+    minp = minp.astype(jnp.int32)
+    skip = (counts == 0) | (counts == minp)
+    emit = jnp.logical_not(skip) & (counts <= jnp.asarray(tau, jnp.int32))
+    return jnp.where(skip, CLASS_SKIP, jnp.where(emit, CLASS_EMIT, CLASS_STORE)).astype(
+        jnp.int32
+    )
+
+
+def intersect_classify_ref(
+    bits: jax.Array, pairs: jax.Array, parent_counts: jax.Array, tau: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused oracle: child bitsets + popcounts + per-pair class codes."""
+    child, counts = intersect_pairs_ref(bits, pairs)
+    minp = jnp.minimum(parent_counts[pairs[:, 0]], parent_counts[pairs[:, 1]])
+    return child, counts, classify_counts_ref(counts, minp, tau)
+
+
+def intersect_classify_count_ref(
+    bits: jax.Array, pairs: jax.Array, parent_counts: jax.Array, tau: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Fused count-only oracle (k = k_max): no child bitset is produced."""
+    counts = intersect_count_ref(bits, pairs)
+    minp = jnp.minimum(parent_counts[pairs[:, 0]], parent_counts[pairs[:, 1]])
+    return counts, classify_counts_ref(counts, minp, tau)

@@ -18,7 +18,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        shape, axes
     )
 
 
@@ -31,5 +31,4 @@ def make_host_mesh(data: int = 4, model: int = 2) -> jax.sharding.Mesh:
             data, model = n, 1
     return jax.make_mesh(
         (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
     )

@@ -31,6 +31,8 @@ def main() -> None:
     ap.add_argument("--ordering", default="ascending")
     ap.add_argument("--no-bounds", action="store_true")
     ap.add_argument("--engine", default="numpy", choices=["numpy", "jnp", "pallas"])
+    ap.add_argument("--no-fused-classify", action="store_true",
+                    help="classify on the host (pre-fusion baseline path)")
     ap.add_argument("--sharded", action="store_true", help="shard over local devices")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -47,18 +49,19 @@ def main() -> None:
             D = gen(n=args.n, seed=args.seed)
 
     cfg = KyivConfig(tau=args.tau, kmax=args.kmax, ordering=args.ordering,
-                     use_bounds=not args.no_bounds, engine=args.engine)
+                     use_bounds=not args.no_bounds, engine=args.engine,
+                     fused_classify=not args.no_fused_classify)
     prep = preprocess(itemize(D), cfg.tau, ordering=cfg.ordering, seed=cfg.seed)
 
-    intersect_fn = None
+    pipeline_factory = None
     if args.sharded:
-        import jax
-        from ..core.sharded import make_sharded_intersect
+        from ..core.sharded import make_sharded_pipeline
         from .mesh import make_host_mesh
 
         mesh = make_host_mesh()
-        intersect_fn = make_sharded_intersect(mesh, pair_axes=("data",),
-                                              word_axis="model")
+        pipeline_factory = make_sharded_pipeline(mesh, pair_axes=("data",),
+                                                 word_axis="model",
+                                                 fused_classify=cfg.fused_classify)
         print(f"sharded over mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     hook = None
@@ -71,7 +74,8 @@ def main() -> None:
                         "bits": lvl.bits, "next_k": state["next_k"]},
                     {"tau": cfg.tau, "kmax": cfg.kmax})
 
-    res = mine_preprocessed(prep, cfg, intersect_fn=intersect_fn, on_level_end=hook)
+    res = mine_preprocessed(prep, cfg, pipeline_factory=pipeline_factory,
+                            on_level_end=hook)
 
     print(f"dataset {D.shape}, |L| = {prep.n_l}, tau={cfg.tau}, kmax={cfg.kmax}")
     print(f"minimal tau-infrequent itemsets: {len(res.itemsets)}")

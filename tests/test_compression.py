@@ -60,8 +60,7 @@ ocfg = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
 exact = make_train_step(model, ocfg)
 p1, o1, m1 = exact(params, opt, batch)
 
-mesh = jax.make_mesh((8, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((8, 1), ("data", "model"))
 comp = make_compressed_dp_step(model, ocfg, mesh, ("data",))
 p2, o2, m2 = comp(params, opt, batch, jax.random.PRNGKey(42))
 

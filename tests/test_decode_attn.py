@@ -17,7 +17,7 @@ import jax, jax.numpy as jnp
 from repro.models.layers.attention import decode_attention
 from repro.serving.decode_attn import seq_sharded_decode_attention
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 for (b, L, h, kv, hd, window) in [(2, 64, 4, 2, 16, 0), (1, 128, 8, 1, 8, 0),
                                   (2, 64, 4, 4, 16, 24)]:

@@ -35,8 +35,7 @@ with tempfile.TemporaryDirectory() as d:
     batch = {"tokens": tokens, "labels": labels}
     losses = []
     for shape in [(4, 2), (2, 2)]:
-        mesh = jax.make_mesh(shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh(shape, ("data", "model"))
         plan = make_plan(mesh)
         print(mesh_fingerprint(mesh))
         p = redistribute(tree["params"], plan, kind="params")

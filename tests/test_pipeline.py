@@ -25,7 +25,7 @@ import numpy as np
 import jax, jax.numpy as jnp
 from repro.distributed.pipeline import pipeline_forward
 
-mesh = jax.make_mesh((4,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((4,), ("stage",))
 S, D = 4, 16
 rng = np.random.default_rng(0)
 stage_params = {"w": jnp.asarray(rng.standard_normal((S, D, D)), jnp.float32) * 0.3,

@@ -90,8 +90,7 @@ def test_real_program_collective_parse():
     devs = jax.devices()
     if len(devs) < 1:
         return
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("model",))
     # single-device: no collectives expected — parser returns empty
     f = jax.jit(lambda a, b: a @ b)
     lowered = f.lower(

@@ -19,20 +19,32 @@ import numpy as np
 import jax
 from repro.core import mine, KyivConfig, itemize, preprocess
 from repro.core.kyiv import mine_preprocessed
-from repro.core.sharded import make_sharded_intersect
+from repro.core.sharded import make_sharded_intersect, make_sharded_pipeline
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
 rng = np.random.default_rng(11)
 for word_axis in (None, "model"):
     fn = make_sharded_intersect(mesh, pair_axes=("data",), word_axis=word_axis)
+    factory = make_sharded_pipeline(mesh, pair_axes=("data",), word_axis=word_axis)
     for trial in range(3):
         D = rng.integers(0, 4, size=(80, 6))
         cfg = KyivConfig(tau=2, kmax=4)
         seq = mine(D, cfg).canonical_set()
         prep = preprocess(itemize(D), cfg.tau)
+        # legacy intersect_fn injection (host classification)
         shr = mine_preprocessed(prep, cfg, intersect_fn=fn).canonical_set()
-        assert seq == shr, (word_axis, trial)
+        assert seq == shr, ("intersect_fn", word_axis, trial)
+        # fused device-classified pipeline
+        pip = mine_preprocessed(prep, cfg, pipeline_factory=factory).canonical_set()
+        assert seq == pip, ("pipeline", word_axis, trial)
+    # host-classified pipeline baseline (fused_classify=False)
+    factory_host = make_sharded_pipeline(mesh, pair_axes=("data",),
+                                         word_axis=word_axis, fused_classify=False)
+    D = rng.integers(0, 4, size=(80, 6))
+    cfg = KyivConfig(tau=2, kmax=4)
+    prep = preprocess(itemize(D), cfg.tau)
+    host = mine_preprocessed(prep, cfg, pipeline_factory=factory_host).canonical_set()
+    assert host == mine(D, cfg).canonical_set(), ("pipeline-host", word_axis)
 print("SHARDED_OK")
 """
 

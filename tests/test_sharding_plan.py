@@ -18,8 +18,7 @@ from repro.configs import ARCHS, SHAPES, input_specs
 from repro.distributed.sharding import make_plan
 from repro.models.zoo import build
 
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((4, 4), ("data", "model"))
 plan = make_plan(mesh)
 assert plan.dp == ("data",) and plan.tp == "model"
 
