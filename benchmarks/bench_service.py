@@ -1,0 +1,163 @@
+"""Resident mining service benchmark: warm-vs-cold and append-vs-full.
+
+Three measurements on one synthetic randomized table:
+
+1. **cold**     — first ``MiningService.mine`` at a fresh version
+                  (preprocess + full Algorithm 1).
+2. **cached**   — the same query repeated: an LRU hit on
+                  ``(version, tau, kmax, ordering)``. Acceptance: >= 20x
+                  faster than cold.
+3. **append**   — for growing delta block sizes, ``/append`` then re-mine.
+                  The incremental path (recount + boundary expansion +
+                  delta-born scan) must cost a function of the *delta*, not
+                  the accumulated table: the recorded ``incremental_s``
+                  column grows with the block size and every block stays
+                  far below ``cold_equiv_s`` (a cold re-mine of the same
+                  concatenated table).
+
+Results are appended to ``BENCH_service.json`` next to this file (a list of
+runs, one per invocation) so the serving-perf trajectory is tracked across
+PRs. Default is the container-sized config; ``--full`` is the paper-scale
+50k-row randomized table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import KyivConfig, mine  # noqa: E402
+from repro.data.synth import randomized_dataset  # noqa: E402
+from repro.service import IncrementalConfig, MiningService  # noqa: E402
+
+try:  # package-relative when run via benchmarks.run
+    from .common import FULL, QUICK, Row, emit
+except ImportError:  # direct `python benchmarks/bench_service.py`
+    from common import FULL, QUICK, Row, emit  # type: ignore
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_service.json")
+
+
+def run(cfg=QUICK, *, engine="numpy", n=None, m=None, tau=1, kmax=None,
+        full=False) -> tuple[list[Row], dict]:
+    n = n or cfg["rand_n"]
+    m = m or cfg["rand_m"]
+    kmax = kmax or min(cfg["kmax"], 3)
+    base = randomized_dataset(n, m, seed=0)
+    rng = np.random.default_rng(1)
+
+    service = MiningService.from_dataset(
+        base,
+        engine=engine,
+        incremental=IncrementalConfig(max_delta_fraction=0.5),
+    )
+
+    rows: list[Row] = []
+    record: dict = {
+        "engine": engine, "n": n, "m": m, "tau": tau, "kmax": kmax,
+        "timestamp": time.time(), "platform": platform.platform(),
+    }
+
+    cold = service.mine(tau=tau, kmax=kmax)
+    cached = service.mine(tau=tau, kmax=kmax)
+    assert (cold.source, cached.source) == ("cold", "cache"), (
+        cold.source, cached.source,
+    )
+    cached_speedup = cold.latency_s / max(cached.latency_s, 1e-9)
+    record.update(
+        cold_s=cold.latency_s,
+        cached_s=cached.latency_s,
+        cached_speedup=cached_speedup,
+        n_itemsets=cold.n_itemsets,
+        cached_speedup_ge_20x=bool(cached_speedup >= 20.0),
+    )
+    rows.append(Row("service/cold_mine", cold.latency_s * 1e6,
+                    f"n_itemsets={cold.n_itemsets}"))
+    rows.append(Row("service/cached_repeat", cached.latency_s * 1e6,
+                    f"speedup={cached_speedup:.0f}x"))
+
+    # append-vs-full: growing delta blocks on the same accumulated table
+    deltas = [max(n // 1000, 1), max(n // 100, 2), max(n // 20, 4)]
+    appends = []
+    acc = base
+    domain_hi = int(base.max()) + 1
+    for d in deltas:
+        block = rng.integers(1, domain_hi, size=(d, m))
+        service.append(block)
+        acc = np.concatenate([acc, block])
+        inc = service.mine(tau=tau, kmax=kmax)
+        # cold equivalent of the same concatenated table (what re-answering
+        # without the resident store would cost)
+        t0 = time.perf_counter()
+        cold_equiv = mine(acc, KyivConfig(tau=tau, kmax=kmax, engine=engine))
+        cold_equiv_s = time.perf_counter() - t0
+        assert len(cold_equiv.itemsets) == inc.n_itemsets, (
+            "incremental diverged from cold",
+            len(cold_equiv.itemsets),
+            inc.n_itemsets,
+        )
+        appends.append(
+            {
+                "delta_rows": d,
+                "total_rows": int(acc.shape[0]),
+                "source": inc.source,
+                "incremental_s": inc.latency_s,
+                "cold_equiv_s": cold_equiv_s,
+                "speedup_vs_cold": cold_equiv_s / max(inc.latency_s, 1e-9),
+                "info": inc.info,
+                "n_itemsets": inc.n_itemsets,
+            }
+        )
+        rows.append(
+            Row(
+                f"service/append_{d}_rows",
+                inc.latency_s * 1e6,
+                f"source={inc.source} cold_equiv={cold_equiv_s:.3f}s",
+            )
+        )
+    # delta scaling: incremental cost must track the block size, i.e. the
+    # smallest block is the cheapest and every block beats the cold re-mine
+    incs = [a for a in appends if a["source"] == "incremental"]
+    record["appends"] = appends
+    record["delta_scaling_ok"] = bool(
+        len(incs) == len(appends)
+        and all(a["incremental_s"] < a["cold_equiv_s"] for a in incs)
+        and incs[0]["incremental_s"] <= incs[-1]["incremental_s"]
+    )
+    service.close()
+    return rows, record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale table")
+    ap.add_argument("--engine", default="numpy")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--m", type=int, default=None)
+    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--kmax", type=int, default=None)
+    args = ap.parse_args()
+    cfg = FULL if args.full else QUICK
+    rows, record = run(cfg, engine=args.engine, n=args.n, m=args.m,
+                       tau=args.tau, kmax=args.kmax, full=args.full)
+    emit(rows)
+    history = []
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            history = json.load(f)
+    history.append(record)
+    with open(OUT_PATH, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"# appended run to {OUT_PATH}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

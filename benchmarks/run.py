@@ -28,6 +28,7 @@ BENCHES = [
     ("fig12", "bench_fig12_memory"),
     ("fig13", "bench_fig13_parallel"),
     ("fused", "bench_fused_pipeline"),
+    ("service", "bench_service"),
     ("roofline", "bench_roofline"),
 ]
 

@@ -1,0 +1,113 @@
+"""End-to-end smoke of the resident mining service over real HTTP.
+
+Starts ``repro.launch.serve_miner`` as a subprocess, issues /append + /mine
+requests with stdlib urllib, and asserts the caching/incremental contract:
+
+  1. first /mine is cold,
+  2. the repeat at the same version is a cache hit,
+  3. /append bumps the version,
+  4. /mine after the append is served (incrementally or cold) with the new
+     version and a repeat hits the cache again,
+  5. /report agrees with /mine.
+
+Used by the CI service smoke job; also runnable directly:
+
+  PYTHONPATH=src python examples/service_smoke.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+import urllib.error
+import urllib.request
+
+PORT = int(os.environ.get("SMOKE_PORT", "8753"))
+BASE = f"http://127.0.0.1:{PORT}"
+
+
+def req(path: str, payload: dict | None = None) -> dict:
+    if payload is None:
+        r = urllib.request.urlopen(BASE + path, timeout=60)
+    else:
+        r = urllib.request.urlopen(
+            urllib.request.Request(
+                BASE + path,
+                data=json.dumps(payload).encode(),
+                headers={"Content-Type": "application/json"},
+            ),
+            timeout=60,
+        )
+    return json.loads(r.read())
+
+
+def wait_healthy(proc: subprocess.Popen, timeout: float = 60.0) -> None:
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            raise RuntimeError(f"serve_miner exited early: rc={proc.returncode}")
+        try:
+            if req("/healthz").get("ok"):
+                return
+        except (urllib.error.URLError, ConnectionError):
+            time.sleep(0.3)
+    raise RuntimeError("serve_miner did not become healthy in time")
+
+
+def main() -> None:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.launch.serve_miner",
+            "--port", str(PORT),
+            "--preload", "randomized", "--n", "500", "--m", "6",
+        ],
+        env=env,
+    )
+    try:
+        wait_healthy(proc)
+
+        m1 = req("/mine", {"tau": 1, "kmax": 3, "max_itemsets": 3})
+        assert m1["source"] == "cold", m1["source"]
+        assert m1["n_itemsets"] > 0
+
+        m2 = req("/mine", {"tau": 1, "kmax": 3, "max_itemsets": 3})
+        assert m2["source"] == "cache", m2["source"]
+        assert m2["n_itemsets"] == m1["n_itemsets"]
+
+        a = req("/append", {"rows": [[1, 2, 3, 4, 5, 6], [7, 8, 9, 1, 2, 3]]})
+        assert a["version"] == m1["version"] + 1, a
+
+        m3 = req("/mine", {"tau": 1, "kmax": 3, "max_itemsets": 3})
+        assert m3["version"] == a["version"]
+        assert m3["source"] in ("incremental", "cold"), m3["source"]
+
+        m4 = req("/mine", {"tau": 1, "kmax": 3, "max_itemsets": 3})
+        assert m4["source"] == "cache", m4["source"]
+
+        rep = req("/report?tau=1&kmax=3")
+        assert rep["n_quasi_identifiers"] == m3["n_itemsets"], rep
+
+        stats = req("/stats")
+        assert stats["cache"]["hits"] >= 2, stats
+
+        print(
+            "SERVICE_SMOKE_OK "
+            f"cold={m1['latency_s']:.3f}s cache={m2['latency_s']:.5f}s "
+            f"post_append={m3['source']} n_itemsets={m3['n_itemsets']}"
+        )
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    main()

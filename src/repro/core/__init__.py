@@ -7,7 +7,15 @@ from .preprocess import Preprocessed, preprocess, ORDERINGS
 from .prefix import Level, CandidateBatch, generate_candidates, prefix_group_sizes
 from .support import ItemsetIndex, support_test
 from .bounds import lemma_bound, corollary_bound, apply_bounds
-from .kyiv import KyivConfig, LevelStats, MiningResult, mine, mine_preprocessed
+from .kyiv import (
+    KyivConfig,
+    LevelStats,
+    MiningResult,
+    MiningState,
+    mine,
+    mine_preprocessed,
+    prepare,
+)
 from .oracle import brute_force_minimal_infrequent
 from .minit import minit_minimal_infrequent
 
@@ -32,8 +40,10 @@ __all__ = [
     "KyivConfig",
     "LevelStats",
     "MiningResult",
+    "MiningState",
     "mine",
     "mine_preprocessed",
+    "prepare",
     "brute_force_minimal_infrequent",
     "minit_minimal_infrequent",
 ]

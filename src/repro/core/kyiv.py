@@ -55,7 +55,15 @@ from .prefix import CandidateBatch, Level, iter_candidate_batches
 from .support import ItemsetIndex, support_test
 from .bounds import apply_bounds
 
-__all__ = ["KyivConfig", "LevelStats", "MiningResult", "mine", "mine_preprocessed"]
+__all__ = [
+    "KyivConfig",
+    "LevelStats",
+    "MiningResult",
+    "MiningState",
+    "mine",
+    "mine_preprocessed",
+    "prepare",
+]
 
 
 @dataclasses.dataclass
@@ -141,6 +149,46 @@ class MiningResult:
         return max((s.level_bytes for s in self.stats), default=0)
 
 
+@dataclasses.dataclass
+class MiningState:
+    """Resumable mining state at a level boundary (Alg. 1 outer loop).
+
+    Produced for every ``on_level_end`` callback and accepted back as
+    ``resume_state`` — the typed form of what used to be an ad-hoc dict.
+    Checkpoint managers and the resident mining service both hold one of
+    these to restart (or warm-continue) a run without redoing earlier
+    levels. Mapping-style access (``state["level"]``) is kept so existing
+    checkpoint hooks keep working.
+    """
+
+    results: list[tuple[tuple[int, ...], int]]
+    stats: list["LevelStats"]
+    level: Level
+    grandparent_index: ItemsetIndex | None
+    next_k: int
+
+    def __getitem__(self, key: str) -> Any:
+        return getattr(self, key)
+
+    def get(self, key: str, default: Any = None) -> Any:
+        return getattr(self, key, default)
+
+    def keys(self):
+        return (f.name for f in dataclasses.fields(self))
+
+    @classmethod
+    def from_mapping(cls, m: "MiningState | dict[str, Any]") -> "MiningState":
+        if isinstance(m, cls):
+            return m
+        return cls(
+            results=list(m["results"]),
+            stats=list(m["stats"]),
+            level=m["level"],
+            grandparent_index=m.get("grandparent_index"),
+            next_k=m["next_k"],
+        )
+
+
 def _expand_mirrors(
     itemset_ids: tuple[int, ...],
     count: int,
@@ -188,8 +236,8 @@ def mine_preprocessed(
     *,
     intersect_fn: Callable[..., Any] | None = None,
     pipeline_factory: Callable[..., Any] | None = None,
-    on_level_end: Callable[[int, dict[str, Any]], None] | None = None,
-    resume_state: dict[str, Any] | None = None,
+    on_level_end: Callable[[int, "MiningState"], None] | None = None,
+    resume_state: "MiningState | dict[str, Any] | None" = None,
 ) -> MiningResult:
     """Run Algorithm 1 on a preprocessed item table.
 
@@ -197,8 +245,9 @@ def mine_preprocessed(
     pipeline (``repro.core.sharded.make_sharded_pipeline`` supplies a
     distributed one); ``intersect_fn(bits, pairs, write_children)`` is the
     older injection contract, adapted with host-side classification.
-    ``on_level_end`` is the checkpoint hook; ``resume_state`` (from a
-    checkpoint) restarts at a level boundary.
+    ``on_level_end`` receives a :class:`MiningState` at every level boundary
+    (the checkpoint hook); ``resume_state`` (a ``MiningState`` or the
+    equivalent mapping from an old checkpoint) restarts there.
     """
     t_start = time.perf_counter()
     table = prep.table
@@ -244,12 +293,13 @@ def mine_preprocessed(
     k = 2
 
     if resume_state is not None:
-        results = list(resume_state["results"])
-        stats = list(resume_state["stats"])
-        level = resume_state["level"]
-        grandparent_index = resume_state.get("grandparent_index")
+        st = MiningState.from_mapping(resume_state)
+        results = list(st.results)
+        stats = list(st.stats)
+        level = st.level
+        grandparent_index = st.grandparent_index
         level_index = ItemsetIndex(level.itemsets, level.counts, n_symbols=prep.n_l)
-        k = resume_state["next_k"]
+        k = st.next_k
 
     while k <= kmax and level.t >= 2:
         ls = LevelStats(k=k)
@@ -384,13 +434,13 @@ def mine_preprocessed(
         if on_level_end is not None:
             on_level_end(
                 k - 1,
-                {
-                    "results": results,
-                    "stats": stats,
-                    "level": level,
-                    "grandparent_index": grandparent_index,
-                    "next_k": k,
-                },
+                MiningState(
+                    results=results,
+                    stats=stats,
+                    level=level,
+                    grandparent_index=grandparent_index,
+                    next_k=k,
+                ),
             )
 
     return MiningResult(
@@ -402,12 +452,22 @@ def mine_preprocessed(
     )
 
 
+def prepare(dataset_or_table: "np.ndarray | ItemTable", config: KyivConfig) -> Preprocessed:
+    """Itemize (if needed) and §4.1-preprocess for a config — the cold half of
+    :func:`mine`, split out so callers holding a prebuilt :class:`ItemTable`
+    (the resident service's dataset store) can reuse it across requests."""
+    table = (
+        dataset_or_table
+        if isinstance(dataset_or_table, ItemTable)
+        else itemize(dataset_or_table)
+    )
+    return preprocess(table, config.tau, ordering=config.ordering, seed=config.seed)
+
+
 def mine(dataset: np.ndarray, config: KyivConfig | None = None, **kw) -> MiningResult:
     """End-to-end: itemize -> preprocess (§4.1) -> Algorithm 1."""
     if config is None:
         config = KyivConfig(**kw)
     elif kw:
         config = dataclasses.replace(config, **kw)
-    table = itemize(dataset)
-    prep = preprocess(table, config.tau, ordering=config.ordering, seed=config.seed)
-    return mine_preprocessed(prep, config)
+    return mine_preprocessed(prepare(dataset, config), config)

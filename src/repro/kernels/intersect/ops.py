@@ -45,6 +45,7 @@ count, so callers never observe padding either way.
 from __future__ import annotations
 
 import math
+import threading
 
 import numpy as np
 
@@ -64,6 +65,10 @@ __all__ = [
     "LevelPipeline",
     "BatchHandle",
     "ENGINES",
+    "ExecutableCache",
+    "EXEC_CACHE",
+    "executable_cache_stats",
+    "reset_executable_cache",
     "CLASS_SKIP",
     "CLASS_EMIT",
     "CLASS_STORE",
@@ -167,6 +172,62 @@ _JIT_PAIRS_REF = jax.jit(_ref.intersect_pairs_ref)
 _JIT_COUNT_REF = jax.jit(_ref.intersect_count_ref)
 _JIT_CLASSIFY_REF = jax.jit(_ref.intersect_classify_ref)
 _JIT_CLASSIFY_COUNT_REF = jax.jit(_ref.intersect_classify_count_ref)
+
+
+class ExecutableCache:
+    """Process-wide cache of bound batch-dispatch callables.
+
+    One entry per ``(engine, path flags, W, bucket, tile sizes, interpret,
+    donate)`` combination — i.e. per *executable bucket*. ``jax.jit`` already
+    memoises compiled executables by shape, but the dispatch-branch selection,
+    tile arithmetic and kernel-variant binding used to be redone on every
+    ``LevelPipeline`` dispatch of every ``mine()`` call; hoisting them here
+    makes the bucket set shared across pipelines, levels and mining requests
+    (the resident service's warm start), and makes warm-vs-cold observable
+    via hit/miss counters.
+    """
+
+    def __init__(self):
+        self._fns: dict[tuple, Any] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: tuple, builder):
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is not None:
+                self.hits += 1
+                return fn
+            self.misses += 1
+        fn = builder()
+        with self._lock:
+            # a racing builder may have beaten us; keep the first binding so
+            # every caller shares one executable bucket
+            fn = self._fns.setdefault(key, fn)
+        return fn
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._fns), "hits": self.hits, "misses": self.misses}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._fns.clear()
+            self.hits = 0
+            self.misses = 0
+
+
+EXEC_CACHE = ExecutableCache()
+
+
+def executable_cache_stats() -> dict:
+    """Snapshot of the shared executable-bucket cache (entries/hits/misses)."""
+    return EXEC_CACHE.stats()
+
+
+def reset_executable_cache() -> None:
+    EXEC_CACHE.clear()
 
 
 def intersect_and_count(
@@ -385,76 +446,141 @@ class LevelPipeline:
 
     # -- device (jnp / pallas) engines --------------------------------------
 
-    def _dispatch_device(self, padded: np.ndarray, write_children: bool):
-        """Async-dispatch one padded bucket; returns device arrays."""
-        pairs_j = jnp.asarray(padded)
+    def _bucket_key(self, bucket: int, write_children: bool) -> tuple:
+        return (
+            self.engine,
+            self.indexed,
+            self.fused_classify,
+            write_children,
+            self.n_words,
+            bucket,
+            self.block_pairs,
+            self.block_words,
+            self.interpret,
+            getattr(self, "_donate", False),
+        )
+
+    def _build_dispatch(self, bucket: int, write_children: bool):
+        """Bind one executable bucket: a callable
+        ``fn(bits, pairs_j, pc, tau) -> (child | None, cnt, cls | None)``.
+
+        Everything static — engine branch, kernel variant, tile sizes — is
+        resolved here, once per bucket shape, and the bound closure is shared
+        process-wide through :data:`EXEC_CACHE`.
+        """
         if self.engine == "jnp":
             if self.fused_classify:
                 if write_children:
-                    return _JIT_CLASSIFY_REF(self._bits, pairs_j, self._pc, self._tau_dev)
-                cnt, cls = _JIT_CLASSIFY_COUNT_REF(
-                    self._bits, pairs_j, self._pc, self._tau_dev
+                    return lambda bits, pairs_j, pc, tau: _JIT_CLASSIFY_REF(
+                        bits, pairs_j, pc, tau
+                    )
+                return lambda bits, pairs_j, pc, tau: (
+                    None,
+                    *_JIT_CLASSIFY_COUNT_REF(bits, pairs_j, pc, tau),
                 )
-                return None, cnt, cls
             if write_children:
-                child, cnt = _JIT_PAIRS_REF(self._bits, pairs_j)
-                return child, cnt, None
-            return None, _JIT_COUNT_REF(self._bits, pairs_j), None
+                return lambda bits, pairs_j, pc, tau: (
+                    *_JIT_PAIRS_REF(bits, pairs_j),
+                    None,
+                )
+            return lambda bits, pairs_j, pc, tau: (
+                None,
+                _JIT_COUNT_REF(bits, pairs_j),
+                None,
+            )
 
         # pallas
         bw = _largest_divisor_tile(self.n_words, self.block_words)
+        interpret = self.interpret
         if self.indexed:
             if self.fused_classify:
                 if write_children:
-                    return _k.intersect_classify_write_indexed(
-                        self._bits, pairs_j, self._pc, self._tau_dev,
-                        block_words=bw, interpret=self.interpret,
+                    return lambda bits, pairs_j, pc, tau: _k.intersect_classify_write_indexed(
+                        bits, pairs_j, pc, tau, block_words=bw, interpret=interpret
                     )
-                cnt, cls = _k.intersect_classify_count_indexed(
-                    self._bits, pairs_j, self._pc, self._tau_dev,
-                    block_words=bw, interpret=self.interpret,
+                return lambda bits, pairs_j, pc, tau: (
+                    None,
+                    *_k.intersect_classify_count_indexed(
+                        bits, pairs_j, pc, tau, block_words=bw, interpret=interpret
+                    ),
                 )
-                return None, cnt, cls
             if write_children:
-                child, cnt = _k.intersect_write_indexed(
-                    self._bits, pairs_j, block_words=bw, interpret=self.interpret
+                return lambda bits, pairs_j, pc, tau: (
+                    *_k.intersect_write_indexed(
+                        bits, pairs_j, block_words=bw, interpret=interpret
+                    ),
+                    None,
                 )
-                return child, cnt, None
-            cnt = _k.intersect_count_indexed(
-                self._bits, pairs_j, block_words=bw, interpret=self.interpret
+            return lambda bits, pairs_j, pc, tau: (
+                None,
+                _k.intersect_count_indexed(
+                    bits, pairs_j, block_words=bw, interpret=interpret
+                ),
+                None,
             )
-            return None, cnt, None
 
         # gathered pallas path
-        a = self._bits[pairs_j[:, 0]]
-        b = self._bits[pairs_j[:, 1]]
-        bm = _largest_divisor_tile(padded.shape[0], self.block_pairs)
+        bm = _largest_divisor_tile(bucket, self.block_pairs)
         if self.fused_classify:
-            minp = jnp.minimum(self._pc[pairs_j[:, 0]], self._pc[pairs_j[:, 1]])
             if write_children:
-                fn = (
+                kern = (
                     _k.intersect_classify_write_gathered_donating
                     if self._donate
                     else _k.intersect_classify_write_gathered
                 )
-                return fn(
-                    a, b, minp, self._tau_dev,
-                    block_pairs=bm, block_words=bw, interpret=self.interpret,
+
+                def dispatch(bits, pairs_j, pc, tau):
+                    a = bits[pairs_j[:, 0]]
+                    b = bits[pairs_j[:, 1]]
+                    minp = jnp.minimum(pc[pairs_j[:, 0]], pc[pairs_j[:, 1]])
+                    return kern(
+                        a, b, minp, tau,
+                        block_pairs=bm, block_words=bw, interpret=interpret,
+                    )
+
+                return dispatch
+
+            def dispatch(bits, pairs_j, pc, tau):
+                a = bits[pairs_j[:, 0]]
+                b = bits[pairs_j[:, 1]]
+                minp = jnp.minimum(pc[pairs_j[:, 0]], pc[pairs_j[:, 1]])
+                cnt, cls = _k.intersect_classify_count_gathered(
+                    a, b, minp, tau,
+                    block_pairs=bm, block_words=bw, interpret=interpret,
                 )
-            cnt, cls = _k.intersect_classify_count_gathered(
-                a, b, minp, self._tau_dev,
-                block_pairs=bm, block_words=bw, interpret=self.interpret,
-            )
-            return None, cnt, cls
+                return None, cnt, cls
+
+            return dispatch
         if write_children:
-            child, cnt = _k.intersect_write_gathered(
-                a, b, block_pairs=bm, block_words=bw, interpret=self.interpret
+
+            def dispatch(bits, pairs_j, pc, tau):
+                a = bits[pairs_j[:, 0]]
+                b = bits[pairs_j[:, 1]]
+                child, cnt = _k.intersect_write_gathered(
+                    a, b, block_pairs=bm, block_words=bw, interpret=interpret
+                )
+                return child, cnt, None
+
+            return dispatch
+
+        def dispatch(bits, pairs_j, pc, tau):
+            a = bits[pairs_j[:, 0]]
+            b = bits[pairs_j[:, 1]]
+            cnt = _k.intersect_count_gathered(
+                a, b, block_pairs=bm, block_words=bw, interpret=interpret
             )
-            return child, cnt, None
-        cnt = _k.intersect_count_gathered(
-            a, b, block_pairs=bm, block_words=bw, interpret=self.interpret
+            return None, cnt, None
+
+        return dispatch
+
+    def _dispatch_device(self, padded: np.ndarray, write_children: bool):
+        """Async-dispatch one padded bucket; returns device arrays."""
+        bucket = int(padded.shape[0])
+        fn = EXEC_CACHE.get(
+            self._bucket_key(bucket, write_children),
+            lambda: self._build_dispatch(bucket, write_children),
         )
-        return None, cnt, None
+        return fn(self._bits, jnp.asarray(padded), self._pc, self._tau_dev)
 
     def submit(self, pairs: np.ndarray, write_children: bool) -> BatchHandle:
         """Dispatch one batch of pair intersections; non-blocking on device engines."""

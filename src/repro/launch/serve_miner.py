@@ -1,0 +1,168 @@
+"""Resident mining service over HTTP (stdlib only).
+
+  PYTHONPATH=src python -m repro.launch.serve_miner --port 8750 \
+      --preload randomized --n 2000 --m 10
+
+Endpoints (JSON in / JSON out):
+
+  POST /append   {"rows": [[...], ...]}                 -> version watermarks
+  POST /mine     {"tau": 1, "kmax": 3, "ordering": "ascending",
+                  "max_itemsets": 100}                  -> itemsets + source
+  GET  /mine?tau=1&kmax=3                               -> same, query form
+  GET  /report?tau=1&kmax=3                             -> sdc quasi-id report
+  GET  /stats                                           -> cache/store/exec stats
+  GET  /healthz                                         -> liveness
+
+``source`` in the /mine response is "cold", "incremental" or "cache" — the
+CI smoke job asserts a repeated query comes back "cache".
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlparse
+
+import numpy as np
+
+from ..service import IncrementalConfig, MiningService
+
+__all__ = ["make_server", "main"]
+
+
+def _mine_params(payload: dict) -> dict:
+    return {
+        "tau": int(payload.get("tau", 1)),
+        "kmax": int(payload.get("kmax", 3)),
+        "ordering": str(payload.get("ordering", "ascending")),
+    }
+
+
+class MinerHandler(BaseHTTPRequestHandler):
+    service: MiningService  # bound by make_server
+    quiet: bool = True
+
+    def log_message(self, fmt, *args):  # noqa: D102
+        if not self.quiet:
+            super().log_message(fmt, *args)
+
+    def _send(self, code: int, payload: dict) -> None:
+        body = json.dumps(payload).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _body(self) -> dict:
+        length = int(self.headers.get("Content-Length") or 0)
+        if not length:
+            return {}
+        return json.loads(self.rfile.read(length) or b"{}")
+
+    def _query(self) -> dict:
+        qs = parse_qs(urlparse(self.path).query)
+        return {k: v[0] for k, v in qs.items()}
+
+    def _handle(self, payload: dict) -> None:
+        route = urlparse(self.path).path
+        if route == "/healthz":
+            self._send(200, {"ok": True})
+        elif route == "/stats":
+            self._send(200, self.service.stats())
+        elif route == "/append":
+            rows = np.asarray(payload.get("rows", []), dtype=np.int64)
+            if rows.size == 0:
+                self._send(400, {"error": "append requires non-empty 'rows'"})
+                return
+            self._send(200, self.service.append(rows))
+        elif route == "/mine":
+            max_itemsets = payload.get("max_itemsets")
+            resp = self.service.mine(**_mine_params(payload))
+            self._send(
+                200,
+                resp.to_json(
+                    max_itemsets=int(max_itemsets) if max_itemsets is not None else None
+                ),
+            )
+        elif route == "/report":
+            self._send(200, self.service.report(**_mine_params(payload)))
+        else:
+            self._send(404, {"error": f"unknown route {route}"})
+
+    def do_GET(self):  # noqa: N802
+        try:
+            self._handle(self._query())
+        except Exception as e:  # service must survive bad requests
+            self._send(500, {"error": f"{type(e).__name__}: {e}"})
+
+    def do_POST(self):  # noqa: N802
+        try:
+            self._handle(self._body())
+        except Exception as e:
+            self._send(500, {"error": f"{type(e).__name__}: {e}"})
+
+
+def make_server(
+    service: MiningService, host: str = "127.0.0.1", port: int = 8750, *, quiet: bool = True
+) -> ThreadingHTTPServer:
+    handler = type(
+        "BoundMinerHandler", (MinerHandler,), {"service": service, "quiet": quiet}
+    )
+    return ThreadingHTTPServer((host, port), handler)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8750)
+    ap.add_argument("--engine", default="numpy", choices=["numpy", "jnp", "pallas"])
+    ap.add_argument("--cache-capacity", type=int, default=64)
+    ap.add_argument("--max-delta-fraction", type=float, default=0.25)
+    ap.add_argument("--preload", default=None,
+                    help="'randomized' for a synthetic table, or a path: "
+                         "*.csv via data.loaders.read_csv, else FIMI format")
+    ap.add_argument("--n", type=int, default=2000, help="--preload randomized rows")
+    ap.add_argument("--m", type=int, default=10, help="--preload randomized columns")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    service = MiningService(
+        engine=args.engine,
+        cache_capacity=args.cache_capacity,
+        incremental=IncrementalConfig(max_delta_fraction=args.max_delta_fraction),
+    )
+    if args.preload == "randomized":
+        from ..data.synth import randomized_dataset
+
+        service.append(randomized_dataset(args.n, args.m, seed=args.seed))
+    elif args.preload and args.preload.endswith(".csv"):
+        from ..data.loaders import read_csv
+
+        service.append(read_csv(args.preload)[0])
+    elif args.preload:
+        from ..data.loaders import read_fimi
+
+        service.append(read_fimi(args.preload))
+
+    server = make_server(service, args.host, args.port, quiet=not args.verbose)
+    store = service._store
+    print(
+        f"serve_miner on http://{args.host}:{args.port} "
+        f"(engine={args.engine}, rows={store.n_rows if store else 0}, "
+        f"items={store.n_items if store else 0})",
+        flush=True,
+    )
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.server_close()
+        service.close()
+
+
+if __name__ == "__main__":
+    main()

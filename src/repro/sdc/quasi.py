@@ -15,7 +15,12 @@ import numpy as np
 
 from ..core import KyivConfig, MiningResult, mine
 
-__all__ = ["QuasiIdentifierReport", "find_quasi_identifiers", "k_anonymize_columns"]
+__all__ = [
+    "QuasiIdentifierReport",
+    "find_quasi_identifiers",
+    "k_anonymize_columns",
+    "report_as_dict",
+]
 
 
 @dataclasses.dataclass
@@ -64,6 +69,20 @@ def find_quasi_identifiers(
 ) -> QuasiIdentifierReport:
     res = mine(dataset, KyivConfig(tau=tau, kmax=kmax, **config_kw))
     return QuasiIdentifierReport(result=res, tau=tau, kmax=kmax)
+
+
+def report_as_dict(report: QuasiIdentifierReport) -> dict:
+    """JSON-serialisable summary of a report — the payload of the resident
+    mining service's ``/report`` endpoint."""
+    return {
+        "tau": report.tau,
+        "kmax": report.kmax,
+        "n_quasi_identifiers": report.n_quasi_identifiers,
+        "by_size": {str(k): v for k, v in sorted(report.by_size().items())},
+        "risky_columns": {str(k): v for k, v in sorted(report.risky_columns().items())},
+        "unique_records": report.unique_records(),
+        "n_rows": report.result.prep.table.n_rows,
+    }
 
 
 def k_anonymize_columns(dataset: np.ndarray, k: int = 5, seed: int = 0) -> np.ndarray:

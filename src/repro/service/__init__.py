@@ -1,0 +1,30 @@
+"""Resident mining service: device-resident dataset store, incremental
+append mining, and a request-batched quasi-identifier API.
+
+The one-shot ``repro.core.mine`` answers a single question about a static
+table. This package turns the miner into a *service* over a growing table:
+``DatasetStore`` keeps the itemized bitsets live and versioned across
+row-block appends, ``mine_incremental`` exploits support monotonicity to
+re-answer after appends at delta cost, ``ResultCache``/``RequestScheduler``
+make repeat and concurrent traffic cheap, and ``MiningService`` is the
+facade the HTTP endpoint (``repro.launch.serve_miner``) exposes.
+"""
+
+from .api import MineResponse, MiningService
+from .cache import CacheEntry, ResultCache, make_key
+from .incremental import IncrementalConfig, delta_support, mine_incremental
+from .scheduler import RequestScheduler
+from .store import DatasetStore
+
+__all__ = [
+    "CacheEntry",
+    "DatasetStore",
+    "IncrementalConfig",
+    "MineResponse",
+    "MiningService",
+    "RequestScheduler",
+    "ResultCache",
+    "delta_support",
+    "make_key",
+    "mine_incremental",
+]

@@ -1,0 +1,299 @@
+"""The resident mining service facade.
+
+``MiningService`` glues the subsystem together into the workflow the paper
+motivates (a custodian continuously vetting a growing table):
+
+    service = MiningService.from_dataset(D, engine="numpy")
+    service.mine(tau=1, kmax=3)          # cold: preprocess + Algorithm 1
+    service.mine(tau=1, kmax=3)          # warm: LRU hit on (version, ...)
+    service.append(new_rows)             # itemizes only the block
+    service.mine(tau=1, kmax=3)          # incremental: recount + boundary
+    service.report(tau=1, kmax=3)        # sdc quasi-identifier summary
+
+Request flow for ``mine``: snapshot the store (atomic version + immutable
+table) -> result-cache lookup -> request scheduler (concurrent identical
+requests coalesce onto one run) -> incremental delta mine against the
+newest cached base for the same parameters, falling back to a cold
+``mine_preprocessed`` when the delta invariants don't hold. Preprocessed
+tables are themselves cached per ``(version, tau, ordering, seed)`` so a
+cold run at a warm version skips §4.1 preprocessing, and all runs share the
+process-wide executable buckets (``kernels.intersect.ops.EXEC_CACHE``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+
+import numpy as np
+
+from ..core.items import ItemTable
+from ..core.kyiv import KyivConfig, MiningResult, mine_preprocessed
+from ..core.preprocess import preprocess
+from ..kernels.intersect import LevelPipeline, executable_cache_stats
+from ..sdc.quasi import QuasiIdentifierReport, report_as_dict
+from .cache import CacheEntry, ResultCache, make_key
+from .incremental import IncrementalConfig, mine_incremental
+from .scheduler import RequestScheduler
+from .store import DatasetStore
+
+__all__ = ["MineResponse", "MiningService"]
+
+_PREP_CACHE_CAPACITY = 8
+
+
+@dataclasses.dataclass
+class MineResponse:
+    """One answered mining request."""
+
+    version: int
+    tau: int
+    kmax: int
+    ordering: str
+    source: str  # "cache" | "incremental" | "cold"
+    latency_s: float
+    result: MiningResult
+    info: dict
+
+    @property
+    def n_itemsets(self) -> int:
+        return len(self.result.itemsets)
+
+    def to_json(self, max_itemsets: int | None = None) -> dict:
+        sets = self.result.as_value_sets()
+        truncated = max_itemsets is not None and len(sets) > max_itemsets
+        if truncated:
+            sets = sets[:max_itemsets]
+        return {
+            "version": self.version,
+            "tau": self.tau,
+            "kmax": self.kmax,
+            "ordering": self.ordering,
+            "source": self.source,
+            "latency_s": self.latency_s,
+            "n_itemsets": self.n_itemsets,
+            "truncated": truncated,
+            "itemsets": [
+                {"items": [[int(c), int(v)] for c, v in ids], "count": int(cnt)}
+                for ids, cnt in sets
+            ],
+            "info": self.info,
+        }
+
+
+class MiningService:
+    """Thread-safe facade over store + cache + scheduler + miners."""
+
+    def __init__(
+        self,
+        n_cols: int | None = None,
+        *,
+        config: KyivConfig | None = None,
+        incremental: IncrementalConfig | None = None,
+        cache_capacity: int = 64,
+        max_workers: int = 1,
+        word_tile: int = 8,
+        **config_kw,
+    ):
+        self.config = config or KyivConfig(**config_kw)
+        self.incremental = incremental or IncrementalConfig()
+        self.word_tile = word_tile
+        self._store: DatasetStore | None = (
+            DatasetStore(n_cols, word_tile=word_tile) if n_cols else None
+        )
+        self.cache = ResultCache(cache_capacity)
+        self.scheduler = RequestScheduler(max_workers=max_workers)
+        self._preps: "OrderedDict[tuple, object]" = OrderedDict()
+        self._lock = threading.Lock()
+
+    @classmethod
+    def from_dataset(cls, dataset: np.ndarray, **kw) -> "MiningService":
+        dataset = np.asarray(dataset)
+        service = cls(dataset.shape[1], **kw)
+        service.append(dataset)
+        return service
+
+    # -- store --------------------------------------------------------------
+
+    @property
+    def store(self) -> DatasetStore:
+        if self._store is None:
+            raise RuntimeError("service has no data yet — append rows first")
+        return self._store
+
+    def append(self, rows: np.ndarray) -> dict:
+        rows = np.asarray(rows)
+        if rows.ndim == 1:
+            rows = rows[None, :]
+        with self._lock:
+            if self._store is None:
+                self._store = DatasetStore(rows.shape[1], word_tile=self.word_tile)
+        version = self.store.append(rows)
+        return {
+            "version": version,
+            "appended": int(rows.shape[0]),
+            "n_rows": self.store.n_rows,
+            "n_items": self.store.n_items,
+        }
+
+    # -- mining -------------------------------------------------------------
+
+    def _request_config(self, tau: int, kmax: int, ordering: str) -> KyivConfig:
+        return dataclasses.replace(
+            self.config, tau=tau, kmax=kmax, ordering=ordering
+        )
+
+    def _prep_for(self, version: int, table: ItemTable, config: KyivConfig):
+        key = (version, config.tau, config.ordering, config.seed)
+        with self._lock:
+            prep = self._preps.get(key)
+            if prep is not None:
+                self._preps.move_to_end(key)
+                return prep
+        prep = preprocess(
+            table, config.tau, ordering=config.ordering, seed=config.seed
+        )
+        with self._lock:
+            self._preps[key] = prep
+            while len(self._preps) > _PREP_CACHE_CAPACITY:
+                self._preps.popitem(last=False)
+        return prep
+
+    def _warm_pipeline_factory(self, version: int, prep, config: KyivConfig):
+        """Level-pipeline factory backed by the store's per-version device
+        bitsets: level 1 becomes a device-side gather of the resident array
+        instead of a fresh host->device upload per request. Returns None
+        (driver default) for the numpy engine or when appends already moved
+        the store past ``version``."""
+        if config.engine == "numpy":
+            return None
+        dev = self.store.device_bits(version)
+        if dev is None:
+            return None
+        import jax.numpy as jnp
+
+        l_bits_dev = dev[jnp.asarray(prep.l_items)]
+
+        def factory(bits, counts, tau):
+            if bits is prep.l_bits:  # level 1: the resident gather, bit-equal
+                bits = l_bits_dev
+            return LevelPipeline(
+                bits,
+                counts,
+                tau=tau,
+                engine=config.engine,
+                interpret=config.interpret,
+                indexed=config.indexed_kernel,
+                fused_classify=config.fused_classify,
+                locality_sort=config.locality_sort,
+            )
+
+        return factory
+
+    def _compute(self, key: tuple, table: ItemTable) -> CacheEntry:
+        # a coalesced predecessor may have finished between the caller's
+        # cache miss and this run being scheduled
+        entry = self.cache.get(key)
+        if entry is not None:
+            return entry
+        version, tau, kmax, ordering = key
+        config = self._request_config(tau, kmax, ordering)
+
+        base = self.cache.latest_base(tau, kmax, ordering, version)
+        if base is not None:
+            inc = mine_incremental(
+                self.store,
+                base.result,
+                base.version,
+                config,
+                self.incremental,
+                table=table,
+            )
+            if inc is not None:
+                result, info = inc
+                entry = CacheEntry(key=key, result=result, source="incremental", info=info)
+                self.cache.put(entry)
+                return entry
+
+        prep = self._prep_for(version, table, config)
+        result = mine_preprocessed(
+            prep, config, pipeline_factory=self._warm_pipeline_factory(version, prep, config)
+        )
+        entry = CacheEntry(
+            key=key,
+            result=result,
+            source="cold",
+            info={"n_rows": table.n_rows, "n_items": table.n_items},
+        )
+        self.cache.put(entry)
+        return entry
+
+    def mine(
+        self,
+        tau: int = 1,
+        kmax: int = 3,
+        ordering: str = "ascending",
+    ) -> MineResponse:
+        t0 = time.perf_counter()
+        # warm path first: a version read + dict lookup, no snapshot copy
+        version = self.store.version
+        key = make_key(version, tau, kmax, ordering)
+        entry = self.cache.get(key)
+        source = "cache"
+        if entry is None:
+            # miss: take the immutable snapshot the computation will run on
+            # (its version may have advanced past the first read — re-key)
+            version, table = self.store.snapshot()
+            key = make_key(version, tau, kmax, ordering)
+            entry = self.scheduler.submit(
+                key, lambda: self._compute(key, table)
+            ).result()
+            source = entry.source
+        return MineResponse(
+            version=version,
+            tau=tau,
+            kmax=kmax,
+            ordering=ordering,
+            source=source,
+            latency_s=time.perf_counter() - t0,
+            result=entry.result,
+            info=dict(entry.info),
+        )
+
+    # -- reports ------------------------------------------------------------
+
+    def report(
+        self,
+        tau: int = 1,
+        kmax: int = 3,
+        ordering: str = "ascending",
+    ) -> dict:
+        """Quasi-identifier report (sdc.quasi) over the current version,
+        served from the result cache when warm."""
+        resp = self.mine(tau=tau, kmax=kmax, ordering=ordering)
+        rep = QuasiIdentifierReport(result=resp.result, tau=tau, kmax=kmax)
+        out = report_as_dict(rep)
+        out.update(version=resp.version, source=resp.source, latency_s=resp.latency_s)
+        return out
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        store = self._store
+        return {
+            "store": {
+                "version": store.version if store else 0,
+                "n_rows": store.n_rows if store else 0,
+                "n_items": store.n_items if store else 0,
+                "n_words": store.n_words if store else 0,
+                "bitset_bytes": store.nbytes() if store else 0,
+            },
+            "cache": self.cache.stats(),
+            "scheduler": self.scheduler.stats(),
+            "executables": executable_cache_stats(),
+        }
+
+    def close(self) -> None:
+        self.scheduler.shutdown()

@@ -1,0 +1,110 @@
+"""LRU result cache for the resident mining service.
+
+Keys are ``(dataset_version, tau, kmax, ordering)`` — everything that
+determines a mining answer on the store (the engine only changes *how* the
+answer is computed; engines are validated bit-identical, so results are
+shared across them). Entries keep the full :class:`MiningResult`, which
+serves three roles:
+
+* repeat queries at the current version return instantly (the ≥20x warm
+  path in ``benchmarks/bench_service.py``);
+* the newest entry for the same ``(tau, kmax, ordering)`` at an *older*
+  version is the base the incremental miner recounts against after appends;
+* quasi-identifier reports are derived from cached results without
+  re-mining.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+
+from ..core.kyiv import MiningResult
+
+__all__ = ["CacheKey", "CacheEntry", "ResultCache", "make_key"]
+
+CacheKey = tuple  # (version, tau, kmax, ordering)
+
+
+def make_key(version: int, tau: int, kmax: int, ordering: str) -> CacheKey:
+    return (int(version), int(tau), int(kmax), str(ordering))
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    key: CacheKey
+    result: MiningResult
+    source: str  # "cold" | "incremental"
+    info: dict
+    created_at: float = dataclasses.field(default_factory=time.time)
+    hits: int = 0
+
+    @property
+    def version(self) -> int:
+        return self.key[0]
+
+
+class ResultCache:
+    """Thread-safe LRU over mining results."""
+
+    def __init__(self, capacity: int = 64):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = capacity
+        self._entries: "OrderedDict[CacheKey, CacheEntry]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: CacheKey) -> CacheEntry | None:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            entry.hits += 1
+            return entry
+
+    def put(self, entry: CacheEntry) -> None:
+        with self._lock:
+            self._entries[entry.key] = entry
+            self._entries.move_to_end(entry.key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+
+    def latest_base(
+        self, tau: int, kmax: int, ordering: str, before_version: int
+    ) -> CacheEntry | None:
+        """Newest entry with the same mining parameters at an older dataset
+        version — the incremental miner's recount base."""
+        best: CacheEntry | None = None
+        with self._lock:
+            for entry in self._entries.values():
+                v, t, k, o = entry.key
+                if (t, k, o) == (tau, kmax, ordering) and v < before_version:
+                    if best is None or v > best.version:
+                        best = entry
+        return best
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0

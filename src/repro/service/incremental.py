@@ -1,0 +1,387 @@
+"""Incremental re-mining after row-block appends (support monotonicity).
+
+Appending rows can only *grow* an itemset's support. That single fact pins
+down exactly how the answer set evolves between a cached base result and the
+current store version:
+
+* A minimal τ-infrequent itemset of the base table stays minimal as long as
+  its own support stays ≤ τ — its proper subsets were frequent and frequency
+  is append-monotone. So every cached result only needs a **recount on the
+  appended rows** (``DatasetStore.delta_bits``): new support = old support +
+  delta support, at a cost proportional to the delta block, not the table.
+* A cached result whose support crossed τ is **promoted** to frequent. Any
+  *new* minimal itemset ``S`` (one not in the base answer) was τ-infrequent
+  in the base table too (monotonicity), hence contained a base-minimal
+  subset; that subset is a proper subset of ``S``, is frequent now, and was
+  therefore promoted. New items (values first seen in the delta) are the one
+  exception — they had no base support at all; frequent new singletons seed
+  the same way. So the full frontier of change is::
+
+      seeds = promoted base results  ∪  frequent brand-new singleton items
+
+  and every new minimal itemset is a strict superset of a seed.
+* Seeds sit *near the τ boundary by construction*: a promoted itemset has
+  new support ≤ τ + d (d = appended rows), so its frequent supersets live in
+  the thin band (τ, τ + d] — the expansion work shrinks with the delta.
+* One family has no base-minimal subset to seed from: itemsets that were
+  **absent** (support 0) in the base table. Cold Kyiv skips absent
+  candidates, so nothing about them is cached. But support 0 at the base
+  means their entire support lies in the delta block — every such itemset
+  is a subset of some appended row's items, so ``_delta_born`` enumerates
+  the ≤kmax column combinations of each appended row (cost per row is a
+  function of table *width*, not history) and classifies them directly.
+
+``_expand_seeds`` explores exactly that band: a BFS over supersets of each
+seed within the frequent item universe, pruning any infrequent node (an
+infrequent proper subset disqualifies every superset from minimality) and
+verifying minimality of emitted sets directly against the store bitsets.
+Mirror items need no special casing — the BFS enumerates concrete item ids,
+which is precisely the ``expansion="full"`` closure the cold miner produces
+(incremental mining therefore requires ``KyivConfig.expansion == "full"``,
+the default).
+
+Past a configurable delta fraction — or if the boundary band turns out not
+to be thin (expansion budget exhausted) — ``mine_incremental`` signals the
+caller to fall back to a cold ``mine()``; the result is bit-identical either
+way (property-tested against cold mining in ``tests/test_incremental.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..core.bitops import popcount_rows
+from ..core.items import ItemTable
+from ..core.kyiv import KyivConfig, LevelStats, MiningResult
+from ..core.preprocess import Preprocessed
+from .store import DatasetStore, mask_delta_words
+
+__all__ = ["IncrementalConfig", "mine_incremental", "delta_support"]
+
+
+@dataclasses.dataclass
+class IncrementalConfig:
+    """Knobs for the append-delta mining path."""
+
+    # past this appended-rows fraction of the current table, recounting +
+    # boundary expansion loses to simply re-mining cold
+    max_delta_fraction: float = 0.25
+    # frontier-node limit for the boundary expansion BFS; exhausted => the
+    # boundary band is not thin, fall back to cold mining
+    expansion_budget: int = 4096
+    # cap on deduplicated delta-born candidate itemsets (subsets of appended
+    # rows); exhausted => fall back to cold mining
+    delta_candidate_budget: int = 262_144
+    enabled: bool = True
+
+
+def _delta_bits_of(table: ItemTable, base_rows: int) -> np.ndarray:
+    """Delta-row bitsets derived from an immutable snapshot table (same
+    contract as ``DatasetStore.delta_bits``, but safe against appends that
+    land while this mining request is running)."""
+    return mask_delta_words(table.bits, base_rows)[0]
+
+
+def delta_support(
+    dbits: np.ndarray, itemsets: list[tuple[int, ...]]
+) -> np.ndarray:
+    """Support of each itemset restricted to the delta rows.
+
+    ``dbits`` is the ``DatasetStore.delta_bits`` slice: (n_items, W_delta).
+    Itemsets are grouped by arity and AND-reduced vectorised; total cost is
+    O(sum_k r_k * k * W_delta).
+    """
+    out = np.zeros(len(itemsets), dtype=np.int64)
+    by_k: dict[int, list[int]] = {}
+    for idx, ids in enumerate(itemsets):
+        by_k.setdefault(len(ids), []).append(idx)
+    for k, idxs in by_k.items():
+        mat = np.asarray([itemsets[i] for i in idxs], dtype=np.int64)  # (r, k)
+        inter = np.bitwise_and.reduce(dbits[mat], axis=1)  # (r, Wd)
+        out[idxs] = popcount_rows(inter)
+    return out
+
+
+def _itemset_support(bits: np.ndarray, ids: tuple[int, ...]) -> int:
+    inter = np.bitwise_and.reduce(bits[list(ids)], axis=0)
+    return int(popcount_rows(inter[None, :])[0])
+
+
+def _is_minimal(
+    bits: np.ndarray, freq: np.ndarray, ids: tuple[int, ...], tau: int
+) -> bool:
+    """All (|S|-1)-subsets frequent? (Sufficient: infrequency is superset-
+    monotone, so a deeper infrequent subset implies an infrequent
+    (|S|-1)-subset.)"""
+    if len(ids) == 1:
+        return True
+    if len(ids) == 2:
+        return bool(freq[ids[0]] > tau and freq[ids[1]] > tau)
+    for drop in range(len(ids)):
+        sub = ids[:drop] + ids[drop + 1 :]
+        if _itemset_support(bits, sub) <= tau:
+            return False
+    return True
+
+
+def _expand_seeds(
+    table: ItemTable,
+    seeds: list[tuple[int, ...]],
+    tau: int,
+    kmax: int,
+    budget: int,
+) -> dict[frozenset, int] | None:
+    """All minimal τ-infrequent strict supersets of any seed, up to kmax.
+
+    Returns None when the frontier exceeds ``budget`` (caller re-mines
+    cold). Every frontier node is a *frequent* superset of a seed; an
+    infrequent node is classified once (emit if minimal) and never extended,
+    because its supersets all contain an infrequent proper subset.
+    """
+    n = table.n_rows
+    freq = table.freq
+    bits = table.bits
+    ext_universe = np.nonzero((freq > tau) & (freq < n))[0].astype(np.int64)
+    found: dict[frozenset, int] = {}
+    if len(ext_universe) == 0:
+        return found
+    visited: set[frozenset] = set()
+    frontier: list[tuple[frozenset, np.ndarray]] = []
+    for ids in seeds:
+        fs = frozenset(int(i) for i in ids)
+        if len(fs) >= kmax or fs in visited:
+            continue
+        visited.add(fs)
+        frontier.append((fs, np.bitwise_and.reduce(bits[list(fs)], axis=0)))
+
+    ext_bits = bits[ext_universe]  # gathered once; the loop below is hot
+    popped = 0
+    while frontier:
+        fs, fb = frontier.pop()
+        popped += 1
+        if popped > budget:
+            return None
+        # count every extension vectorised FIRST: absent extensions (the
+        # overwhelming majority in sparse data) die before any set building
+        cand_bits = ext_bits & fb[None, :]
+        counts = popcount_rows(cand_bits)
+        for idx in np.nonzero(counts)[0]:
+            x = int(ext_universe[idx])
+            if x in fs:
+                continue
+            cs = fs | {x}
+            if cs in visited:
+                continue
+            visited.add(cs)
+            cnt = int(counts[idx])
+            if cnt > tau:
+                if len(cs) < kmax:
+                    frontier.append((cs, cand_bits[idx]))
+            else:
+                ids_t = tuple(sorted(cs))
+                if _is_minimal(bits, freq, ids_t, tau):
+                    found[cs] = cnt
+    return found
+
+
+def _delta_born(
+    table: ItemTable,
+    dbits: np.ndarray,
+    base_rows: int,
+    tau: int,
+    kmax: int,
+    budget: int,
+) -> dict[frozenset, int] | None:
+    """Minimal τ-infrequent itemsets whose base support was 0.
+
+    Their whole support lies in the appended rows, so every one is a subset
+    of the items of at least one delta row. Delta rows are reconstructed
+    from the item-major delta bitsets, each row's items are filtered to the
+    frequent non-uniform universe (an infrequent or uniform member disquali-
+    fies minimality immediately), and the surviving ≤kmax combinations are
+    counted vectorised against the full-width bitsets and checked for
+    minimality directly. Returns None when the deduplicated candidate pool
+    exceeds ``budget``.
+    """
+    import itertools
+
+    n = table.n_rows
+    freq = table.freq
+    bits = table.bits
+    d = n - base_rows
+    if d <= 0 or kmax < 2:
+        return {}
+    # item-major delta bits -> per-row item lists (delta-scaled unpack)
+    flat = np.unpackbits(
+        np.ascontiguousarray(dbits).view(np.uint8), axis=1, bitorder="little"
+    )  # (n_items, Wd*32); column j = global row (base_rows//32)*32 + j
+    lo = (base_rows // 32) * 32
+    row_items = flat[:, base_rows - lo : n - lo]  # (n_items, d)
+    keep = (freq > tau) & (freq < n)
+
+    cands: set[tuple[int, ...]] = set()
+    for r in range(d):
+        items = np.nonzero(row_items[:, r])[0]
+        items = items[keep[items]]
+        for k in range(2, min(kmax, len(items)) + 1):
+            for combo in itertools.combinations(items.tolist(), k):
+                cands.add(combo)
+                if len(cands) > budget:
+                    return None
+
+    found: dict[frozenset, int] = {}
+    by_k: dict[int, list[tuple[int, ...]]] = {}
+    for c in cands:
+        by_k.setdefault(len(c), []).append(c)
+    for k, sets_k in by_k.items():
+        mat = np.asarray(sets_k, dtype=np.int64)  # (r, k)
+        counts = popcount_rows(np.bitwise_and.reduce(bits[mat], axis=1))
+        dcounts = popcount_rows(np.bitwise_and.reduce(dbits[mat], axis=1))
+        for ids, cnt, dcnt in zip(sets_k, counts, dcounts):
+            cnt = int(cnt)
+            # cnt == dcnt <=> base support 0: itemsets present at the base are
+            # exactly the family already covered by recount + seed expansion
+            if 1 <= cnt <= tau and cnt == int(dcnt) and _is_minimal(
+                bits, freq, ids, tau
+            ):
+                found[frozenset(ids)] = cnt
+    return found
+
+
+def _light_prep(table: ItemTable, tau: int) -> Preprocessed:
+    """A Preprocessed container for incremental results: correct item
+    partitions and ordering metadata, but no mirror hashing and no l_bits
+    gather — the incremental path never re-enters the level miner, and
+    skipping the O(items * W) work keeps its cost delta-dominated."""
+    freq = table.freq
+    n = table.n_rows
+    uniform = np.nonzero(freq == n)[0]
+    infrequent = np.nonzero(freq <= tau)[0]
+    keep = np.nonzero((freq > tau) & (freq < n))[0]
+    order = np.lexsort((table.min_row[keep], table.col[keep], freq[keep]))
+    l_items = keep[order]
+    return Preprocessed(
+        table=table,
+        tau=tau,
+        uniform_items=uniform,
+        infrequent_items=infrequent,
+        l_items=l_items,
+        mirror_of={},
+        l_bits=np.zeros((0, table.n_words), dtype=np.uint32),
+        l_freq=freq[l_items].astype(np.int64),
+    )
+
+
+def mine_incremental(
+    store: DatasetStore,
+    base_result: MiningResult,
+    base_version: int,
+    config: KyivConfig,
+    inc_config: IncrementalConfig | None = None,
+    *,
+    table: ItemTable | None = None,
+) -> tuple[MiningResult, dict] | None:
+    """Delta-mine the store against a cached base result.
+
+    ``table`` is an optional immutable snapshot (``DatasetStore.item_table``)
+    to mine; when omitted one is taken now. Only the historical watermarks of
+    ``store`` are consulted otherwise, so concurrent appends cannot skew the
+    delta. Returns ``(result, info)`` or ``None`` when the caller should
+    fall back to a cold mine (delta too large, expansion budget exhausted,
+    or a config the incremental invariants don't cover).
+    """
+    inc = inc_config or IncrementalConfig()
+    if not inc.enabled or config.expansion != "full" or config.kmax < 1:
+        return None
+    base_rows = store.rows_at(base_version)
+    if base_rows == 0:
+        return None
+    t0 = time.perf_counter()
+    if table is None:
+        table = store.item_table()
+    n = table.n_rows
+    delta_rows = n - base_rows
+    if delta_rows <= 0:
+        return None
+    if delta_rows > inc.max_delta_fraction * n:
+        return None
+
+    tau, kmax = config.tau, config.kmax
+
+    # 1. recount every cached result on the appended rows only
+    dbits = _delta_bits_of(table, base_rows)
+    old_sets = [ids for ids, _ in base_result.itemsets]
+    old_counts = np.asarray([c for _, c in base_result.itemsets], dtype=np.int64)
+    new_counts = old_counts + delta_support(dbits, old_sets)
+
+    results: list[tuple[tuple[int, ...], int]] = []
+    seeds: list[tuple[int, ...]] = []
+    for ids, cnt in zip(old_sets, new_counts):
+        if cnt <= tau:
+            results.append((ids, int(cnt)))
+        else:
+            seeds.append(ids)
+    n_promoted = len(seeds)
+
+    # 2. brand-new items (values first seen in the delta)
+    base_items = store.items_at(base_version)
+    freq = table.freq
+    n_new_items = table.n_items - base_items
+    for a in range(base_items, table.n_items):
+        if freq[a] <= tau:
+            results.append(((a,), int(freq[a])))
+        elif freq[a] < n:
+            seeds.append((a,))
+
+    # 3. boundary expansion: previously-present new minimal itemsets are
+    # strict supersets of a seed
+    expanded = _expand_seeds(table, seeds, tau, kmax, inc.expansion_budget)
+    if expanded is None:
+        return None
+
+    # 4. delta-born itemsets: absent at the base (support 0 is never cached),
+    # supported entirely inside the appended block
+    born = _delta_born(
+        table, dbits, base_rows, tau, kmax, inc.delta_candidate_budget
+    )
+    if born is None:
+        return None
+    n_expanded = len(expanded)
+    expanded.update(born)
+
+    # no dedup needed: kept results had base support >= 1 and support <= tau,
+    # expansion finds only sets with a base-infrequent (promoted) proper
+    # subset, and delta-born sets had base support 0 — the families are
+    # pairwise disjoint (expansion/delta-born overlap merged in `expanded`)
+    for cs, cnt in sorted(expanded.items(), key=lambda e: (len(e[0]), sorted(e[0]))):
+        results.append((tuple(sorted(cs)), cnt))
+
+    stats = []
+    by_size: dict[int, int] = {}
+    for ids, _ in results:
+        by_size[len(ids)] = by_size.get(len(ids), 0) + 1
+    for k in range(1, kmax + 1):
+        stats.append(LevelStats(k=k, emitted=by_size.get(k, 0)))
+    elapsed = time.perf_counter() - t0
+    stats[0].time_total = elapsed
+
+    result = MiningResult(
+        itemsets=results,
+        stats=stats,
+        prep=_light_prep(table, tau),
+        config=config,
+        wall_time=elapsed,
+    )
+    info = {
+        "delta_rows": int(delta_rows),
+        "n_promoted": n_promoted,
+        "n_new_items": int(n_new_items),
+        "n_seeds": len(seeds),
+        "n_expanded": n_expanded,
+        "n_delta_born": len(born),
+        "n_recounted": len(old_sets),
+    }
+    return result, info

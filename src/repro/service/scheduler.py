@@ -1,0 +1,65 @@
+"""Request scheduler: coalesce identical concurrent mining requests.
+
+Under burst traffic many clients ask the same ``(version, tau, kmax,
+ordering)`` question at once. Mining it once is both mandatory (one device)
+and sufficient (the answer is deterministic), so the scheduler keeps a map
+of in-flight futures keyed like the result cache: the first request
+schedules the work on a small worker pool, every concurrent duplicate rides
+the same future ("request batching"), and all of them share the warm
+``LevelPipeline`` executable buckets in ``kernels.intersect.ops.EXEC_CACHE``
+because the work runs in one process-wide pool.
+
+``max_workers`` defaults to 1: level mining saturates the device, so
+distinct requests queue FIFO rather than thrash it.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, TypeVar
+
+__all__ = ["RequestScheduler"]
+
+T = TypeVar("T")
+
+
+class RequestScheduler:
+    def __init__(self, max_workers: int = 1):
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="miner"
+        )
+        self._lock = threading.Lock()
+        self._inflight: dict[tuple, Future] = {}
+        self.scheduled = 0
+        self.coalesced = 0
+
+    def submit(self, key: tuple, fn: Callable[[], T]) -> "Future[T]":
+        """Run ``fn`` for ``key``, or join the in-flight run for the same key."""
+        with self._lock:
+            future = self._inflight.get(key)
+            if future is not None:
+                self.coalesced += 1
+                return future
+            future = self._pool.submit(fn)
+            self._inflight[key] = future
+            self.scheduled += 1
+
+        def _done(f: Future, key=key) -> None:
+            with self._lock:
+                if self._inflight.get(key) is f:
+                    del self._inflight[key]
+
+        future.add_done_callback(_done)
+        return future
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "scheduled": self.scheduled,
+                "coalesced": self.coalesced,
+                "inflight": len(self._inflight),
+            }
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=True)

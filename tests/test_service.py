@@ -1,0 +1,381 @@
+"""Resident mining service: store/cache/scheduler/API/HTTP behaviour.
+
+The incremental-vs-cold equivalence property test lives in
+tests/test_incremental.py (hypothesis); here are the deterministic
+subsystem contracts plus targeted incremental edge cases.
+"""
+
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import KyivConfig, bits_to_rows, itemize, mine
+from repro.data.loaders import read_csv
+from repro.kernels.intersect import executable_cache_stats
+from repro.service import (
+    DatasetStore,
+    IncrementalConfig,
+    MiningService,
+    RequestScheduler,
+    ResultCache,
+    make_key,
+    mine_incremental,
+)
+from repro.service.cache import CacheEntry
+
+
+def _value_sets(result):
+    return {(frozenset(ids), c) for ids, c in result.as_value_sets()}
+
+
+def _rand(seed, n, m, dom):
+    return np.random.default_rng(seed).integers(0, dom, size=(n, m))
+
+
+# ---------------------------------------------------------------------------
+# DatasetStore
+# ---------------------------------------------------------------------------
+
+
+def test_store_incremental_itemization_matches_itemize():
+    """Appending in blocks must produce the same items/supports/row sets as
+    one-shot itemization of the concatenated table."""
+    blocks = [_rand(s, 37, 4, 5) for s in range(3)]
+    store = DatasetStore(4)
+    for b in blocks:
+        store.append(b)
+    table = store.item_table()
+    ref = itemize(np.concatenate(blocks))
+
+    got = {
+        (int(table.col[i]), int(table.value[i])): (
+            int(table.freq[i]),
+            int(table.min_row[i]),
+            tuple(bits_to_rows(table.bits[i]).tolist()),
+        )
+        for i in range(table.n_items)
+    }
+    want = {
+        (int(ref.col[i]), int(ref.value[i])): (
+            int(ref.freq[i]),
+            int(ref.min_row[i]),
+            tuple(ref.rows_of(i).tolist()),
+        )
+        for i in range(ref.n_items)
+    }
+    assert got == want
+
+
+def test_store_versioning_and_word_tile():
+    store = DatasetStore(3, word_tile=8)
+    assert store.version == 0 and store.n_rows == 0
+    v1 = store.append(_rand(0, 10, 3, 4))
+    v2 = store.append(_rand(1, 300, 3, 4))
+    assert (v1, v2) == (1, 2)
+    assert store.rows_at(1) == 10 and store.rows_at(2) == 310
+    assert store.n_words % 8 == 0
+    assert store.n_words >= (310 + 31) // 32
+    # appending zero rows does not bump the version
+    assert store.append(np.zeros((0, 3), dtype=np.int64)) == 2
+
+
+def test_store_delta_bits_exact():
+    a, b = _rand(0, 45, 3, 4), _rand(1, 21, 3, 4)
+    store = DatasetStore.from_dataset(a)
+    base = store.version
+    store.append(b)
+    dbits, word_lo = store.delta_bits(base)
+    table = store.item_table()
+    # delta support per item == support of the item within the appended rows
+    ref = itemize(np.concatenate([a, b]))
+    for i in range(table.n_items):
+        key = (int(table.col[i]), int(table.value[i]))
+        j = next(
+            r
+            for r in range(ref.n_items)
+            if (int(ref.col[r]), int(ref.value[r])) == key
+        )
+        delta_rows = [r for r in ref.rows_of(j) if r >= 45]
+        got_rows = [word_lo * 32 + r for r in bits_to_rows(dbits[i])]
+        assert got_rows == delta_rows
+
+
+def test_store_snapshot_immune_to_later_appends():
+    store = DatasetStore.from_dataset(_rand(0, 20, 3, 4))
+    version, table = store.snapshot()
+    before = table.bits.copy()
+    store.append(_rand(1, 40, 3, 4))
+    assert version == 1
+    np.testing.assert_array_equal(table.bits, before)
+
+
+# ---------------------------------------------------------------------------
+# read_csv
+# ---------------------------------------------------------------------------
+
+
+def test_read_csv_header_and_codebooks(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("city,plan\nkyiv,a\nlviv,b\nkyiv,a\nodesa,b\n")
+    table, names, books = read_csv(str(p))
+    assert names == ["city", "plan"]
+    assert table.shape == (4, 2)
+    decoded = [books[0][i] for i in table[:, 0]]
+    assert decoded == ["kyiv", "lviv", "kyiv", "odesa"]
+    # feeds the service directly
+    svc = MiningService.from_dataset(table)
+    assert svc.mine(tau=1, kmax=2).n_itemsets >= 1
+    svc.close()
+
+
+def test_read_csv_headerless(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("1,2\n1,3\n2,2\n")
+    table, names, _ = read_csv(str(p), header=False)
+    assert names == ["col0", "col1"]
+    assert table.shape == (3, 2)
+
+
+# ---------------------------------------------------------------------------
+# ResultCache / RequestScheduler
+# ---------------------------------------------------------------------------
+
+
+def _entry(version, tau=1, kmax=3):
+    key = make_key(version, tau, kmax, "ascending")
+    return CacheEntry(key=key, result=None, source="cold", info={})
+
+
+def test_cache_lru_eviction_and_latest_base():
+    cache = ResultCache(capacity=2)
+    cache.put(_entry(1))
+    cache.put(_entry(2))
+    assert cache.get(make_key(1, 1, 3, "ascending")) is not None  # 1 now MRU
+    cache.put(_entry(3))  # evicts version 2
+    assert cache.get(make_key(2, 1, 3, "ascending")) is None
+    assert cache.get(make_key(1, 1, 3, "ascending")) is not None
+    base = cache.latest_base(1, 3, "ascending", before_version=3)
+    assert base is not None and base.version == 1
+    # different mining params never serve as a base
+    assert cache.latest_base(2, 3, "ascending", before_version=99) is None
+
+
+def test_scheduler_coalesces_identical_requests():
+    sched = RequestScheduler(max_workers=2)
+    calls = []
+    release = threading.Event()
+
+    def work():
+        calls.append(1)
+        release.wait(timeout=5)
+        return "done"
+
+    f1 = sched.submit(("k",), work)
+    f2 = sched.submit(("k",), work)  # coalesced onto f1
+    assert f2 is f1
+    release.set()
+    assert f1.result(timeout=5) == "done"
+    assert len(calls) == 1
+    assert sched.stats()["coalesced"] == 1
+    # after completion the key is free again
+    f3 = sched.submit(("k",), lambda: "again")
+    assert f3.result(timeout=5) == "again"
+    sched.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# MiningService: cold -> cache -> incremental
+# ---------------------------------------------------------------------------
+
+
+def test_service_cold_cache_incremental_equivalence():
+    base, delta = _rand(0, 300, 5, 6), _rand(1, 25, 5, 6)
+    svc = MiningService.from_dataset(base)
+    r1 = svc.mine(tau=2, kmax=3)
+    r2 = svc.mine(tau=2, kmax=3)
+    assert (r1.source, r2.source) == ("cold", "cache")
+    assert r2.result is r1.result
+
+    svc.append(delta)
+    r3 = svc.mine(tau=2, kmax=3)
+    assert r3.source == "incremental"
+    cold = mine(np.concatenate([base, delta]), KyivConfig(tau=2, kmax=3))
+    assert _value_sets(r3.result) == _value_sets(cold)
+
+    # and the incremental result is itself cached
+    assert svc.mine(tau=2, kmax=3).source == "cache"
+    svc.close()
+
+
+def test_service_incremental_new_values_and_mirrors():
+    """Delta introduces brand-new values, promotes old rare ones, and breaks
+    a mirror pair (two columns identical in the base diverge in the delta)."""
+    base = np.stack(
+        [
+            np.array([1, 1, 1, 1, 2, 2, 2, 3]),
+            np.array([1, 1, 1, 1, 2, 2, 2, 3]),  # mirror of col 0 in the base
+            np.array([5, 5, 6, 6, 5, 5, 6, 6]),
+        ],
+        axis=1,
+    )
+    delta = np.array(
+        [
+            [3, 1, 5],  # promotes value 3 in col 0; breaks the col0/col1 mirror
+            [9, 9, 7],  # brand-new values 9 (cols 0, 1) and 7 (col 2)
+            [3, 2, 6],
+        ]
+    )
+    svc = MiningService.from_dataset(
+        base, incremental=IncrementalConfig(max_delta_fraction=0.5)
+    )
+    svc.mine(tau=1, kmax=3)
+    svc.append(delta)
+    r = svc.mine(tau=1, kmax=3)
+    assert r.source == "incremental"
+    assert r.info["n_new_items"] >= 3
+    cold = mine(np.concatenate([base, delta]), KyivConfig(tau=1, kmax=3))
+    assert _value_sets(r.result) == _value_sets(cold)
+    svc.close()
+
+
+def test_service_fallback_on_large_delta():
+    base, delta = _rand(0, 60, 4, 5), _rand(1, 60, 4, 5)
+    svc = MiningService.from_dataset(base)
+    svc.mine(tau=1, kmax=3)
+    svc.append(delta)
+    r = svc.mine(tau=1, kmax=3)  # delta = 50% > max_delta_fraction
+    assert r.source == "cold"
+    cold = mine(np.concatenate([base, delta]), KyivConfig(tau=1, kmax=3))
+    assert _value_sets(r.result) == _value_sets(cold)
+    svc.close()
+
+
+def test_mine_incremental_direct_kmax1():
+    base, delta = _rand(0, 80, 4, 4), _rand(3, 10, 4, 4)
+    store = DatasetStore.from_dataset(base)
+    cfg = KyivConfig(tau=2, kmax=1)
+    base_res = mine(base, cfg)
+    v1 = store.version
+    store.append(delta)
+    out = mine_incremental(store, base_res, v1, cfg, IncrementalConfig())
+    assert out is not None
+    result, _ = out
+    cold = mine(np.concatenate([base, delta]), cfg)
+    assert _value_sets(result) == _value_sets(cold)
+
+
+def test_service_warm_executables_across_requests():
+    """Repeated jnp mining requests reuse the process-wide executable
+    buckets (the ops.EXEC_CACHE warm-start satellite) and mine through the
+    store's device-resident bitsets — results must match the numpy engine."""
+    a, b = _rand(0, 128, 4, 4), _rand(1, 128, 4, 4)
+    svc = MiningService.from_dataset(a, engine="jnp")
+    r1 = svc.mine(tau=1, kmax=3)
+    before = executable_cache_stats()
+    svc.append(b)  # doubles rows -> fallback cold remine
+    r2 = svc.mine(tau=1, kmax=3)
+    after = executable_cache_stats()
+    assert after["hits"] > before["hits"]
+    assert _value_sets(r1.result) == _value_sets(mine(a, KyivConfig(tau=1, kmax=3)))
+    assert _value_sets(r2.result) == _value_sets(
+        mine(np.concatenate([a, b]), KyivConfig(tau=1, kmax=3))
+    )
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# HTTP endpoint
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def http_service():
+    from repro.launch.serve_miner import make_server
+
+    svc = MiningService.from_dataset(_rand(0, 200, 4, 5))
+    server = make_server(svc, port=0)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    yield svc, server.server_address[1]
+    server.shutdown()
+    server.server_close()
+    svc.close()
+
+
+def _req(port, path, payload=None):
+    url = f"http://127.0.0.1:{port}{path}"
+    if payload is None:
+        resp = urllib.request.urlopen(url, timeout=30)
+    else:
+        resp = urllib.request.urlopen(
+            urllib.request.Request(
+                url,
+                data=json.dumps(payload).encode(),
+                headers={"Content-Type": "application/json"},
+            ),
+            timeout=30,
+        )
+    return resp.status, json.loads(resp.read())
+
+
+def test_http_mine_append_report_cycle(http_service):
+    svc, port = http_service
+    assert _req(port, "/healthz")[1] == {"ok": True}
+
+    code, m1 = _req(port, "/mine", {"tau": 1, "kmax": 3, "max_itemsets": 5})
+    assert code == 200 and m1["source"] == "cold" and len(m1["itemsets"]) <= 5
+
+    code, m2 = _req(port, "/mine?tau=1&kmax=3")
+    assert m2["source"] == "cache" and m2["n_itemsets"] == m1["n_itemsets"]
+
+    rows = _rand(7, 15, 4, 5).tolist()
+    code, a = _req(port, "/append", {"rows": rows})
+    assert code == 200 and a["appended"] == 15 and a["version"] == 2
+
+    code, m3 = _req(port, "/mine", {"tau": 1, "kmax": 3})
+    assert m3["source"] in ("incremental", "cold") and m3["version"] == 2
+
+    code, rep = _req(port, "/report?tau=1&kmax=3")
+    assert code == 200
+    assert rep["n_quasi_identifiers"] == m3["n_itemsets"]
+    assert rep["n_rows"] == 215
+
+    code, stats = _req(port, "/stats")
+    assert stats["store"]["n_rows"] == 215
+    assert stats["cache"]["hits"] >= 1
+
+
+def test_http_error_handling(http_service):
+    _, port = http_service
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _req(port, "/nope")
+    assert e.value.code == 404
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _req(port, "/append", {"rows": []})
+    assert e.value.code == 400
+
+
+def test_concurrent_http_requests_coalesce(http_service):
+    svc, port = http_service
+    svc.cache.clear()
+    results = []
+
+    def query():
+        results.append(_req(port, "/mine", {"tau": 1, "kmax": 3})[1])
+
+    threads = [threading.Thread(target=query) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert len(results) == 6
+    assert len({r["n_itemsets"] for r in results}) == 1
+    # exactly one cold run; everyone else hit the cache or coalesced onto it
+    sched = svc.scheduler.stats()
+    cache = svc.cache.stats()
+    assert sched["scheduled"] + sched["coalesced"] + cache["hits"] >= 6
+    assert sum(1 for r in results if r["source"] == "cold") >= 1
