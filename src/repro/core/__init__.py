@@ -3,6 +3,14 @@
 the MINIT baseline and a brute-force oracle."""
 
 from .items import ItemTable, itemize, pack_rows_to_bits, bits_popcount, bits_to_rows
+from .placement import (
+    BitsetPlacement,
+    DevicePlacement,
+    HostPlacement,
+    MeshPlacement,
+    make_placement,
+    resolve_placement,
+)
 from .preprocess import Preprocessed, preprocess, ORDERINGS
 from .prefix import Level, CandidateBatch, generate_candidates, prefix_group_sizes
 from .support import ItemsetIndex, support_test
@@ -25,6 +33,12 @@ __all__ = [
     "pack_rows_to_bits",
     "bits_popcount",
     "bits_to_rows",
+    "BitsetPlacement",
+    "HostPlacement",
+    "DevicePlacement",
+    "MeshPlacement",
+    "make_placement",
+    "resolve_placement",
     "Preprocessed",
     "preprocess",
     "ORDERINGS",

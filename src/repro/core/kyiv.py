@@ -50,6 +50,7 @@ from ..kernels.intersect import (
     LevelPipeline,
 )
 from .items import ItemTable, itemize
+from .placement import resolve_placement
 from .preprocess import Preprocessed, preprocess
 from .prefix import CandidateBatch, Level, iter_candidate_batches
 from .support import ItemsetIndex, support_test
@@ -73,6 +74,11 @@ class KyivConfig:
     ordering: str = "ascending"  # Def. 4.5 / §5.2.4 ablations
     use_bounds: bool = True  # Lemma 4.6 / Corollary 4.7 at k = k_max
     engine: str = "numpy"  # numpy | jnp | pallas
+    # Bitset placement override: a repro.core.placement.BitsetPlacement (e.g.
+    # a MeshPlacement for word-sharded SPMD mining) or an engine-name string;
+    # None derives a host/device placement from `engine` via one factory
+    # (placement.resolve_placement). All placements are bit-identical.
+    placement: Any = None
     interpret: bool = True  # Pallas interpret mode (CPU container)
     indexed_kernel: bool = True
     expansion: str = "full"  # "full" | "paper" (single-swap, Alg. 1 lines 36-38)
@@ -258,13 +264,12 @@ def mine_preprocessed(
     elif intersect_fn is not None:
         make_pipeline = lambda bits, counts, tau_: LegacyIntersectPipeline(intersect_fn, bits)
     else:
+        placement = resolve_placement(config)
         make_pipeline = lambda bits, counts, tau_: LevelPipeline(
             bits,
             counts,
             tau=tau_,
-            engine=config.engine,
-            interpret=config.interpret,
-            indexed=config.indexed_kernel,
+            placement=placement,
             fused_classify=config.fused_classify,
             locality_sort=config.locality_sort,
         )

@@ -1,0 +1,403 @@
+"""Bitset placement layer: ONE abstraction for where level bitsets live.
+
+Before this module existed, bitset placement was hard-coded three different
+ways: ``kernels.intersect.ops.LevelPipeline`` branched on engine strings and
+assumed a single device, ``core.sharded`` carried its own device-put /
+pair-bucketing plumbing, and ``service.store`` pinned every version to a
+single-device cache.  A :class:`BitsetPlacement` now answers the four
+questions every consumer was answering ad hoc:
+
+1. **residency** — how do a level's parent bitsets (and popcounts) become
+   resident for the duration of a BFS level (:meth:`~BitsetPlacement.prepare`),
+   and how does a long-lived array (the service's ``DatasetStore``) get
+   placed once per version (:meth:`~BitsetPlacement.put_bits`);
+2. **padding** — what batch sizes keep executables reused
+   (:meth:`~BitsetPlacement.padded_size`): power-of-two buckets on a single
+   device, additionally rounded to equal per-shard blocks on a mesh;
+3. **dispatch** — how one padded pair batch executes
+   (:meth:`~BitsetPlacement.dispatch`): host numpy, single-device jnp/pallas
+   kernels, or a ``shard_map`` body with a word-axis popcount ``psum``;
+4. **layout** — what word-tile multiple keeps stored bitsets placeable with
+   zero re-packing (:attr:`~BitsetPlacement.store_word_tile`).
+
+The generic batch orchestration (locality sort, async handles, padding
+strips, inverse permutation) lives once in
+``kernels.intersect.ops.LevelPipeline``, which takes a placement instead of
+branching on engine strings.  All placements are bit-identical on mining
+results and per-level counters (property-tested in ``tests/test_placement.py``
+and the 8-device drivers in ``tests/test_sharded_driver.py`` /
+``tests/test_mesh_service.py``).
+
+Implementations
+---------------
+
+* :class:`HostPlacement` — numpy on the host; no padding, eager dispatch.
+* :class:`DevicePlacement` — one JAX device (``jnp`` oracle under jit or the
+  Pallas kernels); parent bitsets uploaded once per level, executables bound
+  per power-of-two bucket through the process-wide ``EXEC_CACHE``.
+* :class:`MeshPlacement` — SPMD mesh: candidate pairs shard over the
+  ``data`` (+``pod``) axes, bitset **words** shard over the ``model`` axis
+  (row-parallelism for datasets whose bitset rows exceed one device), and
+  per-shard partial popcounts are ``psum``-ed — the only collective in the
+  level body, mirroring the paper's "no inter-thread communication"
+  property (§4.4.4).
+
+``make_placement`` / ``resolve_placement`` are the one factory the driver,
+the service and the launchers all go through.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels.intersect import ops as _ops
+from .bitops import popcount_rows
+
+__all__ = [
+    "BitsetPlacement",
+    "HostPlacement",
+    "DevicePlacement",
+    "MeshPlacement",
+    "make_placement",
+    "resolve_placement",
+]
+
+
+@runtime_checkable
+class BitsetPlacement(Protocol):
+    """Where bitsets live and how an intersect+classify batch executes.
+
+    ``kind`` names the placement ("host" / "device" / "mesh");
+    ``store_word_tile`` is the word-count multiple stored bitset matrices
+    must be padded to so :meth:`put_bits` never re-packs (1 for host and
+    single-device, the word-shard count on a mesh).
+    """
+
+    kind: str
+    store_word_tile: int
+
+    def prepare(self, bits, parent_counts, tau: int, *, fused_classify: bool) -> Any:
+        """Make one level's parent bitsets + popcounts resident; returns an
+        opaque state consumed by :meth:`dispatch` for every batch of the
+        level."""
+        ...
+
+    def padded_size(self, m: int, *, pad_buckets: bool = True) -> int:
+        """Batch size ``m`` padded to this placement's executable bucket."""
+        ...
+
+    def dispatch(self, state: Any, padded_pairs: np.ndarray, write_children: bool):
+        """Execute one padded batch; returns ``(child | None, counts,
+        classes | None)`` as placement-native arrays (numpy or device;
+        ``LevelPipeline`` materializes and strips padding)."""
+        ...
+
+    def put_bits(self, bits: np.ndarray):
+        """Place a long-lived bitset matrix (the dataset store's cache)."""
+        ...
+
+    def describe(self) -> dict:
+        """Human/JSON-friendly placement info for ``/stats``."""
+        ...
+
+
+class HostPlacement:
+    """Bitsets stay in host numpy; dispatch is eager and unpadded."""
+
+    kind = "host"
+    store_word_tile = 1
+
+    def prepare(self, bits, parent_counts, tau: int, *, fused_classify: bool):
+        return (
+            np.asarray(bits),
+            np.asarray(parent_counts, dtype=np.int64),
+            int(tau),
+            fused_classify,
+        )
+
+    def padded_size(self, m: int, *, pad_buckets: bool = True) -> int:
+        return m  # host gathers have no executable buckets to reuse
+
+    def dispatch(self, state, padded_pairs: np.ndarray, write_children: bool):
+        bits, pc, tau, fused = state
+        a = bits[padded_pairs[:, 0]]
+        b = bits[padded_pairs[:, 1]]
+        child = np.bitwise_and(a, b)
+        counts = popcount_rows(child)
+        classes = None
+        if fused:
+            minp = np.minimum(pc[padded_pairs[:, 0]], pc[padded_pairs[:, 1]])
+            classes = _ops.classify_counts_host(counts, minp, tau)
+        return (child if write_children else None), counts, classes
+
+    def put_bits(self, bits: np.ndarray):
+        return np.ascontiguousarray(bits)
+
+    def describe(self) -> dict:
+        return {"kind": self.kind, "engine": "numpy", "devices": 0}
+
+    def __repr__(self) -> str:
+        return "HostPlacement()"
+
+
+class DevicePlacement:
+    """One JAX device: the jnp oracle under jit or the Pallas kernels.
+
+    Parent bitsets and popcounts upload once per level; every batch ships
+    only the (tiny) padded pair list, and the bound dispatch callable is
+    shared process-wide per bucket shape through ``ops.EXEC_CACHE``.
+    """
+
+    kind = "device"
+    store_word_tile = 1
+
+    def __init__(
+        self,
+        engine: str = "jnp",
+        *,
+        interpret: bool = True,
+        indexed: bool = True,
+        block_pairs: int = 8,
+        block_words: int = 512,
+    ):
+        if engine not in ("jnp", "pallas"):
+            raise ValueError(f"DevicePlacement engine must be jnp|pallas, got {engine!r}")
+        self.engine = engine
+        self.interpret = interpret
+        self.indexed = indexed
+        self.block_pairs = block_pairs
+        self.block_words = block_words
+        # gathered write path: donate the gathered operand on accelerator
+        # backends so the child output aliases its buffer; CPU donation is
+        # unsupported (warning + copy), so gate on backend.
+        self.donate = jax.default_backend() in ("tpu", "gpu")
+
+    def prepare(self, bits, parent_counts, tau: int, *, fused_classify: bool):
+        return (
+            jnp.asarray(bits),
+            jnp.asarray(np.asarray(parent_counts), dtype=jnp.int32),
+            jnp.int32(int(tau)),
+            int(bits.shape[1]),
+            fused_classify,
+        )
+
+    def padded_size(self, m: int, *, pad_buckets: bool = True) -> int:
+        return _ops.next_bucket(m) if pad_buckets else m
+
+    def dispatch(self, state, padded_pairs: np.ndarray, write_children: bool):
+        bits, pc, tau, n_words, fused = state
+        bucket = int(padded_pairs.shape[0])
+        key = (
+            self.engine,
+            self.indexed,
+            fused,
+            write_children,
+            n_words,
+            bucket,
+            self.block_pairs,
+            self.block_words,
+            self.interpret,
+            self.donate,
+        )
+        fn = _ops.EXEC_CACHE.get(
+            key,
+            lambda: _ops.build_engine_dispatch(
+                self.engine,
+                indexed=self.indexed,
+                fused_classify=fused,
+                write_children=write_children,
+                n_words=n_words,
+                bucket=bucket,
+                block_pairs=self.block_pairs,
+                block_words=self.block_words,
+                interpret=self.interpret,
+                donate=self.donate,
+            ),
+        )
+        return fn(bits, jnp.asarray(padded_pairs), pc, tau)
+
+    def put_bits(self, bits: np.ndarray):
+        return jnp.asarray(bits)
+
+    def describe(self) -> dict:
+        return {
+            "kind": self.kind,
+            "engine": self.engine,
+            "devices": 1,
+            "backend": jax.default_backend(),
+            "indexed": self.indexed,
+            "interpret": self.interpret,
+        }
+
+    def __repr__(self) -> str:
+        return f"DevicePlacement(engine={self.engine!r})"
+
+
+class MeshPlacement:
+    """SPMD mesh: pairs shard over ``pair_axes``, words over ``word_axis``.
+
+    The level body is a ``shard_map`` whose only collective is the word-axis
+    popcount ``psum`` (classification happens after it, per pair shard, with
+    zero extra communication).  Stored bitset matrices placed through
+    :meth:`put_bits` must have a word count that is a multiple of
+    :attr:`store_word_tile` (= the word-shard count) — the ``DatasetStore``
+    aligns its tile to this, so serving a mesh never re-packs bits.
+    """
+
+    kind = "mesh"
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        *,
+        pair_axes: tuple[str, ...] = ("data",),
+        word_axis: str | None = None,
+    ):
+        self.mesh = mesh
+        self.pair_axes = tuple(pair_axes)
+        self.word_axis = word_axis
+        self.pair_shards = int(np.prod([mesh.shape[a] for a in self.pair_axes]))
+        self.word_shards = int(mesh.shape[word_axis]) if word_axis else 1
+        self.store_word_tile = self.word_shards
+        self._bits_sharding = NamedSharding(mesh, P(None, word_axis))
+        self._pairs_sharding = NamedSharding(mesh, P(self.pair_axes, None))
+        self._minp_sharding = NamedSharding(mesh, P(self.pair_axes))
+
+    # the jitted shard_map bodies are bound once per (mesh, axes, variant)
+    # through EXEC_CACHE, so executables are shared across levels, placements
+    # of the same mesh, and mining requests (warm-start on the service).
+    def _step_fn(self, fused: bool, write_children: bool):
+        from . import sharded as _sh
+
+        key = ("mesh", self.mesh, self.pair_axes, self.word_axis, fused, write_children)
+
+        def build():
+            if fused:
+                builder = (
+                    _sh.sharded_level_classify_step
+                    if write_children
+                    else _sh.sharded_level_classify_count_step
+                )
+            else:
+                builder = (
+                    _sh.sharded_level_step if write_children else _sh.sharded_level_count_step
+                )
+            fn, _, _ = builder(
+                self.mesh, pair_axes=self.pair_axes, word_axis=self.word_axis
+            )
+            return fn
+
+        return _ops.EXEC_CACHE.get(key, build)
+
+    def prepare(self, bits, parent_counts, tau: int, *, fused_classify: bool):
+        return (
+            self.put_bits(bits),
+            np.asarray(parent_counts, dtype=np.int32),
+            jnp.int32(int(tau)),
+            fused_classify,
+        )
+
+    def padded_size(self, m: int, *, pad_buckets: bool = True) -> int:
+        from .balance import balanced_blocks
+
+        bucket = _ops.next_bucket(m) if pad_buckets else m
+        padded_m, _ = balanced_blocks(bucket, self.pair_shards)
+        return padded_m
+
+    def dispatch(self, state, padded_pairs: np.ndarray, write_children: bool):
+        bits, pc, tau, fused = state
+        pairs_j = jax.device_put(jnp.asarray(padded_pairs), self._pairs_sharding)
+        if not fused:
+            fn = self._step_fn(False, write_children)
+            if write_children:
+                child, cnt = fn(bits, pairs_j)
+                return child, cnt, None
+            return None, fn(bits, pairs_j), None
+        # padding rows are (0, 0) self-pairs, so their minp is pc[0] and the
+        # fused classifier marks them CLASS_SKIP (count == min parent count)
+        minp = np.minimum(pc[padded_pairs[:, 0]], pc[padded_pairs[:, 1]])
+        minp_j = jax.device_put(jnp.asarray(minp), self._minp_sharding)
+        fn = self._step_fn(True, write_children)
+        if write_children:
+            return fn(bits, pairs_j, minp_j, tau)
+        cnt, cls = fn(bits, pairs_j, minp_j, tau)
+        return None, cnt, cls
+
+    def put_bits(self, bits):
+        """Word-shard a bitset matrix over the mesh.  Host arrays are padded
+        to the shard multiple first (zero words = no rows); arrays already
+        tile-aligned — the dataset store's layout — ship with zero re-packing
+        copies, and jax arrays already on the mesh reshard in place."""
+        if not isinstance(bits, jax.Array):
+            from .sharded import pad_words
+
+            bits = pad_words(np.ascontiguousarray(bits), self.word_shards)
+        return jax.device_put(bits, self._bits_sharding)
+
+    def describe(self) -> dict:
+        return {
+            "kind": self.kind,
+            "devices": int(np.prod(list(self.mesh.shape.values()))),
+            "mesh_shape": dict(self.mesh.shape),
+            "pair_axes": list(self.pair_axes),
+            "word_axis": self.word_axis,
+            "pair_shards": self.pair_shards,
+            "word_shards": self.word_shards,
+        }
+
+    def __repr__(self) -> str:
+        return (
+            f"MeshPlacement(shape={dict(self.mesh.shape)}, "
+            f"pair_axes={self.pair_axes}, word_axis={self.word_axis!r})"
+        )
+
+
+def make_placement(
+    engine: str,
+    *,
+    interpret: bool = True,
+    indexed: bool = True,
+    block_pairs: int = 8,
+    block_words: int = 512,
+) -> BitsetPlacement:
+    """Placement for an engine name: ``numpy``/``host`` -> host,
+    ``jnp``/``pallas`` -> single device."""
+    if engine in ("numpy", "host"):
+        return HostPlacement()
+    if engine in ("jnp", "pallas"):
+        return DevicePlacement(
+            engine,
+            interpret=interpret,
+            indexed=indexed,
+            block_pairs=block_pairs,
+            block_words=block_words,
+        )
+    raise ValueError(
+        f"no placement for engine {engine!r} (expected numpy|jnp|pallas; "
+        "meshes are constructed explicitly via MeshPlacement)"
+    )
+
+
+def resolve_placement(config) -> BitsetPlacement:
+    """The one factory between ``KyivConfig`` and a placement.
+
+    ``config.placement`` wins when set (a :class:`BitsetPlacement` instance,
+    or an engine-name string resolved through :func:`make_placement`);
+    otherwise the legacy ``config.engine`` string selects host or
+    single-device placement with the config's kernel knobs.
+    """
+    p = getattr(config, "placement", None)
+    if p is not None and not isinstance(p, str):
+        return p
+    engine = p if isinstance(p, str) else config.engine
+    return make_placement(
+        engine,
+        interpret=getattr(config, "interpret", True),
+        indexed=getattr(config, "indexed_kernel", True),
+    )

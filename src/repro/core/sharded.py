@@ -1,4 +1,4 @@
-"""Distributed (SPMD) intersection step for the Kyiv miner.
+"""Distributed (SPMD) shard_map level bodies for the Kyiv miner.
 
 The paper parallelises level k with shared-memory threads (§4.4.4): the
 stored level is shared, candidate pairs are divided among threads, and no
@@ -15,21 +15,18 @@ inter-thread communication happens during a level. The SPMD mapping:
     analogue). For the count-only (k = k_max) step no child bitsets are
     written, so per-device HBM traffic is the two fetched rows per pair.
 
-``make_sharded_pipeline`` returns a pipeline factory for
-``mine_preprocessed(pipeline_factory=...)`` — the fused path: the parent
-bitsets are device-put **once per level** (not once per batch), every batch
-is dispatched asynchronously, and the per-pair classification (Alg. 1 lines
-32-41) happens inside the shard_map body right after the popcount ``psum``,
-so each device classifies its own pair shard with zero extra communication.
-``make_sharded_intersect`` is the older drop-in ``intersect_fn`` (host
-classification, device-put per batch) kept for compatibility — numerics of
-both are identical to the sequential engines (tested on an 8-device CPU mesh
-in ``tests/test_sharded_driver.py``).
-
-``sharded_level_step``/``sharded_level_count_step`` (and their
-``*_classify_*`` fused twins) are the jittable bodies the multi-pod dry-run
-lowers on the production meshes (the paper-technique rows of the roofline
-table).
+This module holds exactly the jittable ``shard_map`` bodies
+(``sharded_level_step``/``sharded_level_count_step`` and their
+``*_classify_*`` fused twins — what the multi-pod dry-run lowers on the
+production meshes) plus two thin wrappers. All mesh residency, pair
+bucketing and device-put plumbing that used to be duplicated here now lives
+in ``repro.core.placement.MeshPlacement``: ``make_sharded_pipeline`` is a
+pipeline factory for ``mine_preprocessed(pipeline_factory=...)`` binding a
+``MeshPlacement`` into the generic ``LevelPipeline``, and
+``make_sharded_intersect`` is the older drop-in ``intersect_fn`` contract
+(host classification, placement per batch) kept for compatibility —
+numerics of both are identical to the sequential engines (tested on an
+8-device CPU mesh in ``tests/test_sharded_driver.py``).
 """
 
 from __future__ import annotations
@@ -40,10 +37,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
-
-from ..kernels.intersect.ops import BatchHandle, locality_order, next_bucket
 
 __all__ = [
     "sharded_level_step",
@@ -52,7 +47,6 @@ __all__ = [
     "sharded_level_classify_count_step",
     "make_sharded_intersect",
     "make_sharded_pipeline",
-    "ShardedLevelPipeline",
     "pad_words",
 ]
 
@@ -183,147 +177,6 @@ def sharded_level_classify_count_step(
     return jax.jit(fn), in_specs, out_specs
 
 
-class ShardedLevelPipeline:
-    """Mesh-sharded analogue of ``repro.kernels.intersect.LevelPipeline``.
-
-    The parent bitsets live on the mesh for the whole level; ``submit``
-    ships only the (balanced, padded) pair shard list and the per-pair min
-    parent counts, dispatches asynchronously, and classification comes back
-    fused from the device. Padding pairs are ``(0, 0)`` self-pairs — uniform
-    by construction, so the fused classifier marks them CLASS_SKIP and they
-    are sliced away before the caller ever sees them.
-
-    ``write_fn``/``count_fn`` are the jitted shard_map level bodies. Pass
-    the pair built once by :func:`make_sharded_pipeline` so executables are
-    reused across levels; constructing them here instead (``None``) would
-    re-trace per level.
-    """
-
-    def __init__(
-        self,
-        mesh: Mesh,
-        bits: np.ndarray,
-        parent_counts: np.ndarray,
-        tau: int,
-        *,
-        pair_axes: tuple[str, ...] = ("data",),
-        word_axis: str | None = None,
-        locality_sort: bool = True,
-        fused_classify: bool = True,
-        write_fn=None,
-        count_fn=None,
-    ):
-        from .balance import balanced_blocks
-
-        self._balanced_blocks = balanced_blocks
-        self.mesh = mesh
-        self.pair_axes = pair_axes
-        self.word_axis = word_axis
-        self.locality_sort = locality_sort
-        self.fused_classify = fused_classify
-        self.n_words = int(bits.shape[1])
-        self.pair_shards = int(np.prod([mesh.shape[a] for a in pair_axes]))
-        word_shards = int(mesh.shape[word_axis]) if word_axis else 1
-        if write_fn is None or count_fn is None:
-            write_fn, count_fn = _build_sharded_step_fns(
-                mesh, pair_axes=pair_axes, word_axis=word_axis,
-                fused_classify=fused_classify,
-            )
-        self._write_fn = write_fn
-        self._count_fn = count_fn
-        bits_p = pad_words(np.ascontiguousarray(bits), word_shards)
-        # device-resident across every batch of the level
-        self._bits = jax.device_put(
-            jnp.asarray(bits_p), NamedSharding(mesh, P(None, word_axis))
-        )
-        self._pc = np.asarray(parent_counts, dtype=np.int32)
-        self._tau = jnp.int32(tau)
-        self._pairs_sharding = NamedSharding(mesh, P(pair_axes, None))
-        self._minp_sharding = NamedSharding(mesh, P(pair_axes))
-
-    def submit(self, pairs: np.ndarray, write_children: bool) -> BatchHandle:
-        m = int(pairs.shape[0])
-        if m == 0:
-            child = np.zeros((0, self.n_words), dtype=np.uint32) if write_children else None
-            classes = np.zeros(0, dtype=np.int32) if self.fused_classify else None
-            out = (child, np.zeros(0, dtype=np.int64), classes)
-            return BatchHandle(lambda: out)
-
-        pairs = np.ascontiguousarray(pairs, dtype=np.int32)
-        order = inverse = None
-        if self.locality_sort:
-            order, inverse = locality_order(pairs)
-            if order is not None:
-                pairs = pairs[order]
-
-        padded_m, _ = self._balanced_blocks(next_bucket(m), self.pair_shards)
-        pp = np.zeros((padded_m, 2), dtype=np.int32)
-        pp[:m] = pairs
-        pairs_j = jax.device_put(jnp.asarray(pp), self._pairs_sharding)
-
-        cls_d = None
-        if self.fused_classify:
-            minp = np.zeros(padded_m, dtype=np.int32)
-            minp[:m] = np.minimum(self._pc[pairs[:, 0]], self._pc[pairs[:, 1]])
-            minp[m:] = self._pc[0]  # padding self-pairs: count == minp -> CLASS_SKIP
-            minp_j = jax.device_put(jnp.asarray(minp), self._minp_sharding)
-            if write_children:
-                child_d, cnt_d, cls_d = self._write_fn(
-                    self._bits, pairs_j, minp_j, self._tau
-                )
-            else:
-                child_d = None
-                cnt_d, cls_d = self._count_fn(self._bits, pairs_j, minp_j, self._tau)
-        else:  # host-classified baseline: legacy (bits, pairs) step bodies
-            if write_children:
-                child_d, cnt_d = self._write_fn(self._bits, pairs_j)
-            else:
-                child_d = None
-                cnt_d = self._count_fn(self._bits, pairs_j)
-
-        n_words = self.n_words
-
-        def materialize():
-            counts = np.asarray(cnt_d)[:m].astype(np.int64)
-            classes = np.asarray(cls_d)[:m].astype(np.int32) if cls_d is not None else None
-            child = None
-            if child_d is not None:
-                child = np.asarray(child_d)[:m, :n_words]
-            if inverse is not None:
-                counts = counts[inverse]
-                if classes is not None:
-                    classes = classes[inverse]
-                if child is not None:
-                    child = child[inverse]
-            return child, counts, classes
-
-        return BatchHandle(materialize)
-
-
-def _build_sharded_step_fns(
-    mesh: Mesh,
-    *,
-    pair_axes: tuple[str, ...],
-    word_axis: str | None,
-    fused_classify: bool,
-):
-    if fused_classify:
-        write_fn, _, _ = sharded_level_classify_step(
-            mesh, pair_axes=pair_axes, word_axis=word_axis
-        )
-        count_fn, _, _ = sharded_level_classify_count_step(
-            mesh, pair_axes=pair_axes, word_axis=word_axis
-        )
-    else:
-        write_fn, _, _ = sharded_level_step(
-            mesh, pair_axes=pair_axes, word_axis=word_axis
-        )
-        count_fn, _, _ = sharded_level_count_step(
-            mesh, pair_axes=pair_axes, word_axis=word_axis
-        )
-    return write_fn, count_fn
-
-
 def make_sharded_pipeline(
     mesh: Mesh,
     *,
@@ -334,30 +187,27 @@ def make_sharded_pipeline(
 ):
     """Pipeline factory for ``mine_preprocessed(pipeline_factory=...)``.
 
-    Returns ``factory(bits, parent_counts, tau) -> ShardedLevelPipeline``;
-    compared to :func:`make_sharded_intersect` this keeps the level bitsets
-    device-resident across batches and (with ``fused_classify=True``)
-    returns fused device classification. The jitted shard_map bodies are
-    built once here and shared by every level's pipeline, so XLA executables
-    are reused across levels. ``fused_classify=False`` selects the legacy
-    step bodies and host classification — the baseline path.
+    Returns ``factory(bits, parent_counts, tau) -> LevelPipeline`` bound to
+    one ``MeshPlacement``: level bitsets stay mesh-resident across batches,
+    (with ``fused_classify=True``) classification comes back fused from the
+    shard_map body, and the jitted step executables are shared across levels
+    and placements of the same mesh through ``ops.EXEC_CACHE``.
+    ``fused_classify=False`` selects the legacy step bodies and host
+    classification — the baseline path.
     """
-    write_fn, count_fn = _build_sharded_step_fns(
-        mesh, pair_axes=pair_axes, word_axis=word_axis, fused_classify=fused_classify
-    )
+    from ..kernels.intersect.ops import LevelPipeline
+    from .placement import MeshPlacement
+
+    placement = MeshPlacement(mesh, pair_axes=pair_axes, word_axis=word_axis)
 
     def factory(bits: np.ndarray, parent_counts: np.ndarray, tau: int):
-        return ShardedLevelPipeline(
-            mesh,
+        return LevelPipeline(
             bits,
             parent_counts,
-            tau,
-            pair_axes=pair_axes,
-            word_axis=word_axis,
-            locality_sort=locality_sort,
+            tau=tau,
+            placement=placement,
             fused_classify=fused_classify,
-            write_fn=write_fn,
-            count_fn=count_fn,
+            locality_sort=locality_sort,
         )
 
     return factory
@@ -371,34 +221,25 @@ def make_sharded_intersect(
 ):
     """Drop-in ``intersect_fn`` for ``mine_preprocessed`` running on a mesh.
 
-    Handles padding: pairs to equal per-shard blocks, words to the word-axis
-    multiple. Returns numpy outputs stripped of padding.
+    The pre-pipeline injection contract: classification stays on the host
+    and the bitsets are re-placed per batch (one fresh ``LevelPipeline``
+    each call). Kept for compatibility; new code should prefer
+    :func:`make_sharded_pipeline`.
     """
-    pair_shards = int(np.prod([mesh.shape[a] for a in pair_axes]))
-    word_shards = int(mesh.shape[word_axis]) if word_axis else 1
-    write_fn, _, _ = sharded_level_step(mesh, pair_axes=pair_axes, word_axis=word_axis)
-    count_fn, _, _ = sharded_level_count_step(mesh, pair_axes=pair_axes, word_axis=word_axis)
+    from ..kernels.intersect.ops import LevelPipeline
+    from .placement import MeshPlacement
+
+    placement = MeshPlacement(mesh, pair_axes=pair_axes, word_axis=word_axis)
 
     def intersect_fn(bits: np.ndarray, pairs: np.ndarray, write_children: bool):
-        m = pairs.shape[0]
-        if m == 0:
-            W = bits.shape[1]
-            child = np.zeros((0, W), dtype=np.uint32) if write_children else None
-            return child, np.zeros(0, dtype=np.int64)
-        from .balance import balanced_blocks
-        from ..kernels.intersect.ops import next_bucket
-
-        padded_m, _ = balanced_blocks(next_bucket(m), pair_shards)
-        pp = np.zeros((padded_m, 2), dtype=np.int32)
-        pp[:m] = pairs
-        bits_p = pad_words(np.ascontiguousarray(bits), word_shards)
-        bits_j = jax.device_put(jnp.asarray(bits_p), NamedSharding(mesh, P(None, word_axis)))
-        pairs_j = jax.device_put(jnp.asarray(pp), NamedSharding(mesh, P(pair_axes, None)))
-        if write_children:
-            child, counts = write_fn(bits_j, pairs_j)
-            child_np = np.asarray(child)[:m, : bits.shape[1]]
-            return child_np, np.asarray(counts)[:m].astype(np.int64)
-        counts = count_fn(bits_j, pairs_j)
-        return None, np.asarray(counts)[:m].astype(np.int64)
+        pipe = LevelPipeline(
+            bits,
+            np.zeros(bits.shape[0], dtype=np.int64),
+            tau=0,
+            placement=placement,
+            fused_classify=False,
+        )
+        child, counts, _ = pipe.submit(pairs, write_children).result()
+        return child, counts
 
     return intersect_fn

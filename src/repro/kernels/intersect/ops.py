@@ -19,14 +19,19 @@ Two dispatch surfaces:
   ``CLASS_EMIT`` / ``CLASS_STORE``) computed on the engine, so the driver
   never re-derives the classification masks on the host.
 * :class:`LevelPipeline` — the batch pipeline used by ``repro.core.kyiv``.
-  It puts the parent bitsets (and popcounts) on device **once per level**,
-  dispatches each batch asynchronously (JAX async dispatch: ``submit``
-  returns a handle immediately, blocking only when ``result()`` converts to
-  numpy), and thereby lets host candidate generation / support tests of
-  batch *n+1* overlap the device intersection of batch *n* when the driver
-  double-buffers. Executables are reused across batches via power-of-two
-  pair buckets; on accelerator backends the gathered write path donates its
-  gathered operand so XLA aliases the child output onto it.
+  It is **placement-generic**: a ``repro.core.placement.BitsetPlacement``
+  supplies residency (parent bitsets + popcounts placed once per level),
+  padding (executable buckets; per-shard blocks on a mesh) and dispatch
+  (host numpy, single-device kernels, or shard_map bodies), while this class
+  owns the generic orchestration — locality sort, async handles
+  (``submit`` returns immediately; blocking only when ``result()`` converts
+  to numpy), padding strips and inverse permutation. Host candidate
+  generation / support tests of batch *n+1* therefore overlap the device
+  intersection of batch *n* when the driver double-buffers. Engine-specific
+  kernel binding lives in :func:`build_engine_dispatch` (bound once per
+  bucket shape through :data:`EXEC_CACHE`); on accelerator backends the
+  gathered write path donates its gathered operand so XLA aliases the child
+  output onto it.
 
 Locality-aware pair scheduling: :func:`locality_order` sorts a batch's pairs
 by ``(i, j)`` so the indexed kernel's scalar-prefetch DMA re-fetches each
@@ -60,6 +65,7 @@ __all__ = [
     "intersect_and_count",
     "intersect_classify",
     "classify_counts_host",
+    "build_engine_dispatch",
     "locality_order",
     "next_bucket",
     "LevelPipeline",
@@ -372,21 +378,160 @@ class BatchHandle:
         return self._out
 
 
-class LevelPipeline:
-    """Device-resident, bucket-padded batch dispatcher for one BFS level.
+def build_engine_dispatch(
+    engine: str,
+    *,
+    indexed: bool,
+    fused_classify: bool,
+    write_children: bool,
+    n_words: int,
+    bucket: int,
+    block_pairs: int,
+    block_words: int,
+    interpret: bool,
+    donate: bool,
+):
+    """Bind one executable bucket for a single-device engine: a callable
+    ``fn(bits, pairs_j, pc, tau) -> (child | None, cnt, cls | None)``.
 
-    Construction uploads the parent bitsets and popcounts once; every
-    ``submit`` then ships only the (tiny) pair list. For the ``jnp`` /
-    ``pallas`` engines ``submit`` returns after the asynchronous dispatch, so
+    Everything static — engine branch, kernel variant, tile sizes — is
+    resolved here, once per bucket shape; ``DevicePlacement`` shares the
+    bound closure process-wide through :data:`EXEC_CACHE`.
+    """
+    if engine == "jnp":
+        if fused_classify:
+            if write_children:
+                return lambda bits, pairs_j, pc, tau: _JIT_CLASSIFY_REF(
+                    bits, pairs_j, pc, tau
+                )
+            return lambda bits, pairs_j, pc, tau: (
+                None,
+                *_JIT_CLASSIFY_COUNT_REF(bits, pairs_j, pc, tau),
+            )
+        if write_children:
+            return lambda bits, pairs_j, pc, tau: (
+                *_JIT_PAIRS_REF(bits, pairs_j),
+                None,
+            )
+        return lambda bits, pairs_j, pc, tau: (
+            None,
+            _JIT_COUNT_REF(bits, pairs_j),
+            None,
+        )
+    if engine != "pallas":
+        raise ValueError(f"engine must be jnp|pallas, got {engine!r}")
+
+    # pallas
+    bw = _largest_divisor_tile(n_words, block_words)
+    if indexed:
+        if fused_classify:
+            if write_children:
+                return lambda bits, pairs_j, pc, tau: _k.intersect_classify_write_indexed(
+                    bits, pairs_j, pc, tau, block_words=bw, interpret=interpret
+                )
+            return lambda bits, pairs_j, pc, tau: (
+                None,
+                *_k.intersect_classify_count_indexed(
+                    bits, pairs_j, pc, tau, block_words=bw, interpret=interpret
+                ),
+            )
+        if write_children:
+            return lambda bits, pairs_j, pc, tau: (
+                *_k.intersect_write_indexed(
+                    bits, pairs_j, block_words=bw, interpret=interpret
+                ),
+                None,
+            )
+        return lambda bits, pairs_j, pc, tau: (
+            None,
+            _k.intersect_count_indexed(
+                bits, pairs_j, block_words=bw, interpret=interpret
+            ),
+            None,
+        )
+
+    # gathered pallas path
+    bm = _largest_divisor_tile(bucket, block_pairs)
+    if fused_classify:
+        if write_children:
+            kern = (
+                _k.intersect_classify_write_gathered_donating
+                if donate
+                else _k.intersect_classify_write_gathered
+            )
+
+            def dispatch(bits, pairs_j, pc, tau):
+                a = bits[pairs_j[:, 0]]
+                b = bits[pairs_j[:, 1]]
+                minp = jnp.minimum(pc[pairs_j[:, 0]], pc[pairs_j[:, 1]])
+                return kern(
+                    a, b, minp, tau,
+                    block_pairs=bm, block_words=bw, interpret=interpret,
+                )
+
+            return dispatch
+
+        def dispatch(bits, pairs_j, pc, tau):
+            a = bits[pairs_j[:, 0]]
+            b = bits[pairs_j[:, 1]]
+            minp = jnp.minimum(pc[pairs_j[:, 0]], pc[pairs_j[:, 1]])
+            cnt, cls = _k.intersect_classify_count_gathered(
+                a, b, minp, tau,
+                block_pairs=bm, block_words=bw, interpret=interpret,
+            )
+            return None, cnt, cls
+
+        return dispatch
+    if write_children:
+
+        def dispatch(bits, pairs_j, pc, tau):
+            a = bits[pairs_j[:, 0]]
+            b = bits[pairs_j[:, 1]]
+            child, cnt = _k.intersect_write_gathered(
+                a, b, block_pairs=bm, block_words=bw, interpret=interpret
+            )
+            return child, cnt, None
+
+        return dispatch
+
+    def dispatch(bits, pairs_j, pc, tau):
+        a = bits[pairs_j[:, 0]]
+        b = bits[pairs_j[:, 1]]
+        cnt = _k.intersect_count_gathered(
+            a, b, block_pairs=bm, block_words=bw, interpret=interpret
+        )
+        return None, cnt, None
+
+    return dispatch
+
+
+class LevelPipeline:
+    """Placement-generic, bucket-padded batch dispatcher for one BFS level.
+
+    Construction hands the parent bitsets and popcounts to the placement
+    once (``placement.prepare``); every ``submit`` then ships only the
+    (tiny) pair list. Device/mesh placements dispatch asynchronously, so
     the host can generate and support-test the next candidate batch while
     the device intersects the current one; ``BatchHandle.result()`` is the
-    only synchronisation point. The ``numpy`` engine computes eagerly inside
+    only synchronisation point. The host placement computes eagerly inside
     ``submit`` (same contract, no async).
 
+    This class owns only placement-independent orchestration: the empty-batch
+    shortcut, locality-aware pair scheduling (+ inverse permutation of the
+    outputs), padding to the placement's executable bucket, and stripping
+    padding on materialization. Where the bitsets live and how a padded
+    batch executes is entirely the placement's business — there are no
+    engine-string branches here.
+
+    ``placement`` is any ``repro.core.placement.BitsetPlacement``; passing
+    the legacy ``engine=...`` string instead resolves one through
+    ``repro.core.placement.make_placement`` (kept so existing callers and
+    the ``KyivConfig.engine`` path keep working unchanged).
+
     With ``fused_classify=True`` the per-pair class codes are produced by the
-    engine itself (device classification for jnp/pallas); with ``False`` the
-    handle returns ``classes=None`` and the caller re-derives the masks on
-    the host — kept as the comparison baseline for
+    placement itself (device classification for jnp/pallas/mesh); with
+    ``False`` the handle returns ``classes=None`` and the caller re-derives
+    the masks on the host — kept as the comparison baseline for
     ``benchmarks/bench_fused_pipeline.py``.
     """
 
@@ -396,7 +541,8 @@ class LevelPipeline:
         parent_counts,
         *,
         tau: int,
-        engine: str = "numpy",
+        placement=None,
+        engine: str | None = None,
         interpret: bool = True,
         indexed: bool = True,
         fused_classify: bool = True,
@@ -405,185 +551,30 @@ class LevelPipeline:
         block_words: int = 512,
         pad_buckets: bool = True,
     ):
-        if engine not in ENGINES:
-            raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
-        self.engine = engine
+        if placement is None:
+            # deferred import: core imports kernels, never the reverse at
+            # module scope — this only runs for legacy engine-string callers
+            from ...core.placement import make_placement
+
+            placement = make_placement(
+                engine or "numpy",
+                interpret=interpret,
+                indexed=indexed,
+                block_pairs=block_pairs,
+                block_words=block_words,
+            )
+        self.placement = placement
         self.tau = int(tau)
-        self.interpret = interpret
-        self.indexed = indexed
         self.fused_classify = fused_classify
         self.locality_sort = locality_sort
-        self.block_pairs = block_pairs
-        self.block_words = block_words
         self.pad_buckets = pad_buckets
         self.n_words = int(bits.shape[1])
-        if engine == "numpy":
-            self._bits = np.asarray(bits)
-            self._pc = np.asarray(parent_counts, dtype=np.int64)
-        else:
-            # device-resident across every batch of the level
-            self._bits = jnp.asarray(bits)
-            self._pc = jnp.asarray(np.asarray(parent_counts), dtype=jnp.int32)
-            self._tau_dev = jnp.int32(self.tau)
-            # gathered write path: donate the gathered operand on accelerator
-            # backends so the child output aliases its buffer; CPU donation
-            # is unsupported (warning + copy), so gate on backend.
-            self._donate = jax.default_backend() in ("tpu", "gpu")
-
-    # -- host (numpy) engine -------------------------------------------------
-
-    def _submit_numpy(self, pairs: np.ndarray, write_children: bool) -> BatchHandle:
-        a = self._bits[pairs[:, 0]]
-        b = self._bits[pairs[:, 1]]
-        child = np.bitwise_and(a, b)
-        counts = _popcount_rows(child)
-        classes = None
-        if self.fused_classify:
-            minp = np.minimum(self._pc[pairs[:, 0]], self._pc[pairs[:, 1]])
-            classes = classify_counts_host(counts, minp, self.tau)
-        out = (child if write_children else None, counts, classes)
-        return BatchHandle(lambda: out)
-
-    # -- device (jnp / pallas) engines --------------------------------------
-
-    def _bucket_key(self, bucket: int, write_children: bool) -> tuple:
-        return (
-            self.engine,
-            self.indexed,
-            self.fused_classify,
-            write_children,
-            self.n_words,
-            bucket,
-            self.block_pairs,
-            self.block_words,
-            self.interpret,
-            getattr(self, "_donate", False),
+        self._state = placement.prepare(
+            bits, parent_counts, self.tau, fused_classify=fused_classify
         )
-
-    def _build_dispatch(self, bucket: int, write_children: bool):
-        """Bind one executable bucket: a callable
-        ``fn(bits, pairs_j, pc, tau) -> (child | None, cnt, cls | None)``.
-
-        Everything static — engine branch, kernel variant, tile sizes — is
-        resolved here, once per bucket shape, and the bound closure is shared
-        process-wide through :data:`EXEC_CACHE`.
-        """
-        if self.engine == "jnp":
-            if self.fused_classify:
-                if write_children:
-                    return lambda bits, pairs_j, pc, tau: _JIT_CLASSIFY_REF(
-                        bits, pairs_j, pc, tau
-                    )
-                return lambda bits, pairs_j, pc, tau: (
-                    None,
-                    *_JIT_CLASSIFY_COUNT_REF(bits, pairs_j, pc, tau),
-                )
-            if write_children:
-                return lambda bits, pairs_j, pc, tau: (
-                    *_JIT_PAIRS_REF(bits, pairs_j),
-                    None,
-                )
-            return lambda bits, pairs_j, pc, tau: (
-                None,
-                _JIT_COUNT_REF(bits, pairs_j),
-                None,
-            )
-
-        # pallas
-        bw = _largest_divisor_tile(self.n_words, self.block_words)
-        interpret = self.interpret
-        if self.indexed:
-            if self.fused_classify:
-                if write_children:
-                    return lambda bits, pairs_j, pc, tau: _k.intersect_classify_write_indexed(
-                        bits, pairs_j, pc, tau, block_words=bw, interpret=interpret
-                    )
-                return lambda bits, pairs_j, pc, tau: (
-                    None,
-                    *_k.intersect_classify_count_indexed(
-                        bits, pairs_j, pc, tau, block_words=bw, interpret=interpret
-                    ),
-                )
-            if write_children:
-                return lambda bits, pairs_j, pc, tau: (
-                    *_k.intersect_write_indexed(
-                        bits, pairs_j, block_words=bw, interpret=interpret
-                    ),
-                    None,
-                )
-            return lambda bits, pairs_j, pc, tau: (
-                None,
-                _k.intersect_count_indexed(
-                    bits, pairs_j, block_words=bw, interpret=interpret
-                ),
-                None,
-            )
-
-        # gathered pallas path
-        bm = _largest_divisor_tile(bucket, self.block_pairs)
-        if self.fused_classify:
-            if write_children:
-                kern = (
-                    _k.intersect_classify_write_gathered_donating
-                    if self._donate
-                    else _k.intersect_classify_write_gathered
-                )
-
-                def dispatch(bits, pairs_j, pc, tau):
-                    a = bits[pairs_j[:, 0]]
-                    b = bits[pairs_j[:, 1]]
-                    minp = jnp.minimum(pc[pairs_j[:, 0]], pc[pairs_j[:, 1]])
-                    return kern(
-                        a, b, minp, tau,
-                        block_pairs=bm, block_words=bw, interpret=interpret,
-                    )
-
-                return dispatch
-
-            def dispatch(bits, pairs_j, pc, tau):
-                a = bits[pairs_j[:, 0]]
-                b = bits[pairs_j[:, 1]]
-                minp = jnp.minimum(pc[pairs_j[:, 0]], pc[pairs_j[:, 1]])
-                cnt, cls = _k.intersect_classify_count_gathered(
-                    a, b, minp, tau,
-                    block_pairs=bm, block_words=bw, interpret=interpret,
-                )
-                return None, cnt, cls
-
-            return dispatch
-        if write_children:
-
-            def dispatch(bits, pairs_j, pc, tau):
-                a = bits[pairs_j[:, 0]]
-                b = bits[pairs_j[:, 1]]
-                child, cnt = _k.intersect_write_gathered(
-                    a, b, block_pairs=bm, block_words=bw, interpret=interpret
-                )
-                return child, cnt, None
-
-            return dispatch
-
-        def dispatch(bits, pairs_j, pc, tau):
-            a = bits[pairs_j[:, 0]]
-            b = bits[pairs_j[:, 1]]
-            cnt = _k.intersect_count_gathered(
-                a, b, block_pairs=bm, block_words=bw, interpret=interpret
-            )
-            return None, cnt, None
-
-        return dispatch
-
-    def _dispatch_device(self, padded: np.ndarray, write_children: bool):
-        """Async-dispatch one padded bucket; returns device arrays."""
-        bucket = int(padded.shape[0])
-        fn = EXEC_CACHE.get(
-            self._bucket_key(bucket, write_children),
-            lambda: self._build_dispatch(bucket, write_children),
-        )
-        return fn(self._bits, jnp.asarray(padded), self._pc, self._tau_dev)
 
     def submit(self, pairs: np.ndarray, write_children: bool) -> BatchHandle:
-        """Dispatch one batch of pair intersections; non-blocking on device engines."""
+        """Dispatch one batch of pair intersections; non-blocking on device placements."""
         m = int(pairs.shape[0])
         if m == 0:
             W = self.n_words
@@ -599,25 +590,13 @@ class LevelPipeline:
             if order is not None:
                 pairs = pairs[order]
 
-        if self.engine == "numpy":
-            handle = self._submit_numpy(pairs, write_children)
-            if inverse is None:
-                return handle
-            child, counts, classes = handle.result()
-            out = (
-                child[inverse] if child is not None else None,
-                counts[inverse],
-                classes[inverse] if classes is not None else None,
-            )
-            return BatchHandle(lambda: out)
-
-        bucket = next_bucket(m) if self.pad_buckets else m
-        padded = _pad_pairs(pairs, bucket)
-        child_d, cnt_d, cls_d = self._dispatch_device(padded, write_children)
+        padded = _pad_pairs(pairs, self.placement.padded_size(m, pad_buckets=self.pad_buckets))
+        child_d, cnt_d, cls_d = self.placement.dispatch(self._state, padded, write_children)
+        n_words = self.n_words
 
         def materialize():
             counts = np.asarray(cnt_d)[:m].astype(np.int64)
-            child = np.asarray(child_d)[:m] if child_d is not None else None
+            child = np.asarray(child_d)[:m, :n_words] if child_d is not None else None
             classes = np.asarray(cls_d)[:m].astype(np.int32) if cls_d is not None else None
             if inverse is not None:
                 counts = counts[inverse]

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "mesh_from_spec"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -20,6 +20,24 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(
         shape, axes
     )
+
+
+def mesh_from_spec(spec: str) -> jax.sharding.Mesh:
+    """Parse a ``--mesh`` CLI spec into a (data, model) mesh.
+
+    ``"4x2"`` -> 4-way pair sharding x 2-way word sharding; a bare ``"8"``
+    means pure word sharding ``(1, 8)`` — the row-parallel layout for tables
+    whose bitset rows exceed one device.
+    """
+    raw = spec.lower().replace("×", "x").split("x")
+    if not all(p.isdigit() for p in raw):  # '4x' must error, not flip axes
+        raise ValueError(f"--mesh spec must be 'DATAxMODEL' or 'MODEL', got {spec!r}")
+    parts = [int(p) for p in raw]
+    if len(parts) == 1:
+        parts = [1, parts[0]]
+    if len(parts) != 2 or any(p <= 0 for p in parts):
+        raise ValueError(f"--mesh spec must be 'DATAxMODEL' or 'MODEL', got {spec!r}")
+    return jax.make_mesh(tuple(parts), ("data", "model"))
 
 
 def make_host_mesh(data: int = 4, model: int = 2) -> jax.sharding.Mesh:

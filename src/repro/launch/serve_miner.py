@@ -3,6 +3,10 @@
   PYTHONPATH=src python -m repro.launch.serve_miner --port 8750 \
       --preload randomized --n 2000 --m 10
 
+  # word-sharded store over an 8-device mesh (pairs x words = 2x4):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.serve_miner --mesh 2x4
+
 Endpoints (JSON in / JSON out):
 
   POST /append   {"rows": [[...], ...]}                 -> version watermarks
@@ -10,17 +14,29 @@ Endpoints (JSON in / JSON out):
                   "max_itemsets": 100}                  -> itemsets + source
   GET  /mine?tau=1&kmax=3                               -> same, query form
   GET  /report?tau=1&kmax=3                             -> sdc quasi-id report
-  GET  /stats                                           -> cache/store/exec stats
-  GET  /healthz                                         -> liveness
+  GET  /stats                                           -> store/placement/cache/exec/http stats
+  GET  /healthz                                         -> liveness (never gated)
 
 ``source`` in the /mine response is "cold", "incremental" or "cache" — the
 CI smoke job asserts a repeated query comes back "cache".
+
+Hardening (ROADMAP "authn and backpressure"):
+
+* ``--auth-token TOKEN`` (or env ``MINER_AUTH_TOKEN``) requires
+  ``Authorization: Bearer TOKEN`` on every route except ``/healthz``;
+  constant-time comparison, 401 on mismatch.
+* ``--max-inflight N`` bounds concurrently served requests; when the bound
+  is hit new requests get an immediate ``429 {"error": ...}`` instead of
+  piling onto the mining worker (liveness stays exempt so probes never 429).
 """
 
 from __future__ import annotations
 
 import argparse
+import hmac
 import json
+import os
+import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
 
@@ -42,10 +58,18 @@ def _mine_params(payload: dict) -> dict:
 class MinerHandler(BaseHTTPRequestHandler):
     service: MiningService  # bound by make_server
     quiet: bool = True
+    auth_token: str | None = None
+    inflight: threading.BoundedSemaphore | None = None
+    http_stats: dict  # shared counters, bound by make_server
+    _stats_lock = threading.Lock()
 
     def log_message(self, fmt, *args):  # noqa: D102
         if not self.quiet:
             super().log_message(fmt, *args)
+
+    def _count(self, key: str) -> None:
+        with self._stats_lock:
+            self.http_stats[key] = self.http_stats.get(key, 0) + 1
 
     def _send(self, code: int, payload: dict) -> None:
         body = json.dumps(payload).encode()
@@ -65,12 +89,44 @@ class MinerHandler(BaseHTTPRequestHandler):
         qs = parse_qs(urlparse(self.path).query)
         return {k: v[0] for k, v in qs.items()}
 
+    def _authorized(self) -> bool:
+        if not self.auth_token:
+            return True
+        # compare bytes: compare_digest on str raises TypeError for
+        # non-ASCII, and header bytes are attacker-controlled
+        header = self.headers.get("Authorization", "").encode("utf-8")
+        return hmac.compare_digest(header, f"Bearer {self.auth_token}".encode("utf-8"))
+
     def _handle(self, payload: dict) -> None:
         route = urlparse(self.path).path
-        if route == "/healthz":
+        if route == "/healthz":  # liveness: never auth-gated, never queued
             self._send(200, {"ok": True})
-        elif route == "/stats":
-            self._send(200, self.service.stats())
+            return
+        if not self._authorized():
+            self._count("unauthorized")
+            self._send(401, {"error": "missing or invalid bearer token"})
+            return
+        if self.inflight is not None and not self.inflight.acquire(blocking=False):
+            self._count("rejected")
+            self._send(429, {"error": "request queue full, retry later"})
+            return
+        try:
+            self._count("served")
+            self._dispatch(route, payload)
+        finally:
+            if self.inflight is not None:
+                self.inflight.release()
+
+    def _dispatch(self, route: str, payload: dict) -> None:
+        if route == "/stats":
+            stats = self.service.stats()
+            with self._stats_lock:
+                stats["http"] = dict(self.http_stats)
+            stats["http"]["auth"] = bool(self.auth_token)
+            stats["http"]["max_inflight"] = (
+                self.inflight._initial_value if self.inflight is not None else None
+            )
+            self._send(200, stats)
         elif route == "/append":
             rows = np.asarray(payload.get("rows", []), dtype=np.int64)
             if rows.size == 0:
@@ -105,10 +161,29 @@ class MinerHandler(BaseHTTPRequestHandler):
 
 
 def make_server(
-    service: MiningService, host: str = "127.0.0.1", port: int = 8750, *, quiet: bool = True
+    service: MiningService,
+    host: str = "127.0.0.1",
+    port: int = 8750,
+    *,
+    quiet: bool = True,
+    auth_token: str | None = None,
+    max_inflight: int | None = None,
 ) -> ThreadingHTTPServer:
+    sem = None
+    if max_inflight is not None:
+        if max_inflight <= 0:
+            raise ValueError(f"max_inflight must be positive, got {max_inflight}")
+        sem = threading.BoundedSemaphore(max_inflight)
     handler = type(
-        "BoundMinerHandler", (MinerHandler,), {"service": service, "quiet": quiet}
+        "BoundMinerHandler",
+        (MinerHandler,),
+        {
+            "service": service,
+            "quiet": quiet,
+            "auth_token": auth_token,
+            "inflight": sem,
+            "http_stats": {},
+        },
     )
     return ThreadingHTTPServer((host, port), handler)
 
@@ -118,8 +193,20 @@ def main() -> None:
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8750)
     ap.add_argument("--engine", default="numpy", choices=["numpy", "jnp", "pallas"])
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="serve from a word-sharded mesh store, e.g. '2x4' "
+                         "(pair shards x word shards over the visible devices)")
     ap.add_argument("--cache-capacity", type=int, default=64)
     ap.add_argument("--max-delta-fraction", type=float, default=0.25)
+    ap.add_argument("--compact-threshold", type=int, default=None,
+                    help="auto-compact the store when this many append "
+                         "versions accumulate")
+    ap.add_argument("--auth-token", default=os.environ.get("MINER_AUTH_TOKEN"),
+                    help="require 'Authorization: Bearer <token>' "
+                         "(default: $MINER_AUTH_TOKEN)")
+    ap.add_argument("--max-inflight", type=int, default=64,
+                    help="429 when this many requests are already in flight "
+                         "(0 disables the bound)")
     ap.add_argument("--preload", default=None,
                     help="'randomized' for a synthetic table, or a path: "
                          "*.csv via data.loaders.read_csv, else FIMI format")
@@ -129,9 +216,20 @@ def main() -> None:
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
+    placement = None
+    if args.mesh:
+        from ..core.placement import MeshPlacement
+        from .mesh import mesh_from_spec
+
+        placement = MeshPlacement(
+            mesh_from_spec(args.mesh), pair_axes=("data",), word_axis="model"
+        )
+
     service = MiningService(
         engine=args.engine,
+        placement=placement,
         cache_capacity=args.cache_capacity,
+        compact_threshold=args.compact_threshold,
         incremental=IncrementalConfig(max_delta_fraction=args.max_delta_fraction),
     )
     if args.preload == "randomized":
@@ -147,12 +245,22 @@ def main() -> None:
 
         service.append(read_fimi(args.preload))
 
-    server = make_server(service, args.host, args.port, quiet=not args.verbose)
+    server = make_server(
+        service,
+        args.host,
+        args.port,
+        quiet=not args.verbose,
+        auth_token=args.auth_token,
+        max_inflight=args.max_inflight or None,
+    )
     store = service._store
     print(
         f"serve_miner on http://{args.host}:{args.port} "
-        f"(engine={args.engine}, rows={store.n_rows if store else 0}, "
-        f"items={store.n_items if store else 0})",
+        f"(placement={service.placement.describe()}, "
+        f"rows={store.n_rows if store else 0}, "
+        f"items={store.n_items if store else 0}, "
+        f"auth={'on' if args.auth_token else 'off'}, "
+        f"max_inflight={args.max_inflight or 'unbounded'})",
         flush=True,
     )
     try:

@@ -31,6 +31,7 @@ import numpy as np
 
 from ..core.items import ItemTable
 from ..core.kyiv import KyivConfig, MiningResult, mine_preprocessed
+from ..core.placement import resolve_placement
 from ..core.preprocess import preprocess
 from ..kernels.intersect import LevelPipeline, executable_cache_stats
 from ..sdc.quasi import QuasiIdentifierReport, report_as_dict
@@ -92,16 +93,31 @@ class MiningService:
         *,
         config: KyivConfig | None = None,
         incremental: IncrementalConfig | None = None,
+        placement=None,
         cache_capacity: int = 64,
         max_workers: int = 1,
         word_tile: int = 8,
+        compact_threshold: int | None = None,
+        keep_versions: int = 8,
         **config_kw,
     ):
         self.config = config or KyivConfig(**config_kw)
+        if placement is not None:
+            self.config = dataclasses.replace(self.config, placement=placement)
+        # one resolved placement per service: the store tiles its words for
+        # it and every mining request's LevelPipeline dispatches through it
+        self.placement = resolve_placement(self.config)
+        self.config = dataclasses.replace(self.config, placement=self.placement)
         self.incremental = incremental or IncrementalConfig()
         self.word_tile = word_tile
+        self._store_kw = dict(
+            word_tile=word_tile,
+            placement=self.placement,
+            compact_threshold=compact_threshold,
+            keep_versions=keep_versions,
+        )
         self._store: DatasetStore | None = (
-            DatasetStore(n_cols, word_tile=word_tile) if n_cols else None
+            DatasetStore(n_cols, **self._store_kw) if n_cols else None
         )
         self.cache = ResultCache(cache_capacity)
         self.scheduler = RequestScheduler(max_workers=max_workers)
@@ -129,7 +145,7 @@ class MiningService:
             rows = rows[None, :]
         with self._lock:
             if self._store is None:
-                self._store = DatasetStore(rows.shape[1], word_tile=self.word_tile)
+                self._store = DatasetStore(rows.shape[1], **self._store_kw)
         version = self.store.append(rows)
         return {
             "version": version,
@@ -162,12 +178,14 @@ class MiningService:
         return prep
 
     def _warm_pipeline_factory(self, version: int, prep, config: KyivConfig):
-        """Level-pipeline factory backed by the store's per-version device
-        bitsets: level 1 becomes a device-side gather of the resident array
-        instead of a fresh host->device upload per request. Returns None
-        (driver default) for the numpy engine or when appends already moved
-        the store past ``version``."""
-        if config.engine == "numpy":
+        """Level-pipeline factory backed by the store's per-version resident
+        bitsets: level 1 becomes a device-side gather of the placed array
+        (single-device upload or mesh word-sharding) instead of a fresh
+        host->device transfer per request. Returns None (driver default) for
+        the host placement or when appends already moved the store past
+        ``version``."""
+        placement = self.placement
+        if placement.kind == "host":
             return None
         dev = self.store.device_bits(version)
         if dev is None:
@@ -183,9 +201,7 @@ class MiningService:
                 bits,
                 counts,
                 tau=tau,
-                engine=config.engine,
-                interpret=config.interpret,
-                indexed=config.indexed_kernel,
+                placement=placement,
                 fused_classify=config.fused_classify,
                 locality_sort=config.locality_sort,
             )
@@ -288,12 +304,20 @@ class MiningService:
                 "n_rows": store.n_rows if store else 0,
                 "n_items": store.n_items if store else 0,
                 "n_words": store.n_words if store else 0,
+                "word_tile": store.word_tile if store else self.word_tile,
                 "bitset_bytes": store.nbytes() if store else 0,
+                "compactions": store.compactions if store else 0,
             },
+            "placement": self.placement.describe(),
             "cache": self.cache.stats(),
             "scheduler": self.scheduler.stats(),
             "executables": executable_cache_stats(),
         }
+
+    def compact(self, keep_versions: int | None = None) -> dict:
+        """Manually coalesce the store's append blocks (see
+        :meth:`DatasetStore.compact`)."""
+        return self.store.compact(keep_versions)
 
     def close(self) -> None:
         self.scheduler.shutdown()

@@ -296,7 +296,11 @@ def mine_incremental(
     inc = inc_config or IncrementalConfig()
     if not inc.enabled or config.expansion != "full" or config.kmax < 1:
         return None
-    base_rows = store.rows_at(base_version)
+    try:
+        base_rows = store.rows_at(base_version)
+        base_items = store.items_at(base_version)
+    except KeyError:
+        return None  # base watermark compacted away -> cold remine
     if base_rows == 0:
         return None
     t0 = time.perf_counter()
@@ -327,7 +331,6 @@ def mine_incremental(
     n_promoted = len(seeds)
 
     # 2. brand-new items (values first seen in the delta)
-    base_items = store.items_at(base_version)
     freq = table.freq
     n_new_items = table.n_items - base_items
     for a in range(base_items, table.n_items):

@@ -10,7 +10,11 @@ the intersection kernels consume — **live across requests**:
   dimension is padded to a multiple of ``word_tile`` so that the padded width
   (and hence the Pallas BlockSpec tiling and the executable buckets in
   ``kernels.intersect.ops.EXEC_CACHE``) stays stable while rows accumulate
-  inside a tile, and only steps tile-by-tile afterwards.
+  inside a tile, and only steps tile-by-tile afterwards. When the store is
+  built for a ``repro.core.placement.BitsetPlacement``, the tile is aligned
+  to the placement's ``store_word_tile`` (the word-shard count on a mesh), so
+  append blocks itemize **directly into per-shard word tiles** — placing the
+  matrix on the mesh never re-packs or re-pads it.
 * ``append(rows)`` itemizes *only the appended block*: existing items get new
   bits OR-ed into their rows, new ``(column, value)`` pairs get fresh item
   ids. History is never re-itemized; both the item and word axes grow by
@@ -21,8 +25,17 @@ the intersection kernels consume — **live across requests**:
   restricted to the appended rows, at a cost proportional to the delta, not
   the history.
 * ``device_bits()`` keeps the current full bitset matrix resident on the JAX
-  device (one upload per version), so back-to-back mining requests at the
-  same version skip the host->device transfer.
+  device(s) (one placement per version, through the placement's
+  ``put_bits`` — single-device upload or mesh word-sharding), so
+  back-to-back mining requests at the same version skip the host->device
+  transfer.
+* Long-lived streams accumulate append-block bookkeeping (one version
+  watermark per append, capacity slack from amortised doubling);
+  ``compact()`` coalesces them into a consolidated base — old watermarks
+  beyond ``keep_versions`` are dropped and the backing arrays are trimmed to
+  snug tile-aligned capacity. ``delta_bits``/``rows_at`` semantics are
+  preserved for every retained version; the incremental miner falls back to
+  a cold mine when its base version was compacted away (``has_version``).
 
 Item ids are append-ordered and **stable across versions** — a mined
 itemset's ids stay meaningful after later appends, which is what lets cached
@@ -31,6 +44,7 @@ results be recounted instead of re-derived.
 
 from __future__ import annotations
 
+import math
 import threading
 
 import numpy as np
@@ -65,13 +79,39 @@ class DatasetStore:
     rare and cheap relative to mining).
     """
 
-    def __init__(self, n_cols: int, *, word_tile: int = _MIN_WORD_CAP):
+    def __init__(
+        self,
+        n_cols: int,
+        *,
+        word_tile: int = _MIN_WORD_CAP,
+        placement=None,
+        compact_threshold: int | None = None,
+        keep_versions: int = 8,
+    ):
         if n_cols <= 0:
             raise ValueError(f"n_cols must be positive, got {n_cols}")
         if word_tile <= 0:
             raise ValueError(f"word_tile must be positive, got {word_tile}")
+        if keep_versions <= 0:
+            raise ValueError(f"keep_versions must be positive, got {keep_versions}")
+        if compact_threshold is not None and compact_threshold <= keep_versions + 1:
+            # a compaction retains keep_versions+1 watermarks; a smaller
+            # threshold would re-trigger on every append (compaction thrash)
+            raise ValueError(
+                f"compact_threshold must exceed keep_versions + 1 "
+                f"({keep_versions + 1}), got {compact_threshold}"
+            )
         self.n_cols = int(n_cols)
+        self.placement = placement
+        if placement is not None:
+            # itemize straight into per-shard word tiles: the padded width is
+            # always placeable (mesh word-sharding) with zero re-packing
+            ptile = int(getattr(placement, "store_word_tile", 1) or 1)
+            word_tile = word_tile * ptile // math.gcd(word_tile, ptile)
         self.word_tile = int(word_tile)
+        self.compact_threshold = compact_threshold
+        self.keep_versions = int(keep_versions)
+        self.compactions = 0
         self.n_rows = 0
         self.version = 0
         self._n_items = 0
@@ -192,7 +232,69 @@ class DatasetStore:
             self.version += 1
             self._watermarks[self.version] = (self.n_rows, self._n_items)
             self._device.clear()
+            if (
+                self.compact_threshold is not None
+                and len(self._watermarks) > self.compact_threshold
+            ):
+                self._compact_locked(self.keep_versions)
             return self.version
+
+    # -- compaction ---------------------------------------------------------
+
+    def compact(self, keep_versions: int | None = None) -> dict:
+        """Coalesce accumulated append blocks into a consolidated base.
+
+        Retains the newest ``keep_versions`` append versions plus one
+        consolidated base watermark; everything older is folded into the base
+        (those per-version deltas are no longer addressable — ``has_version``
+        turns False and the incremental miner re-mines cold). Doubling-growth
+        capacity slack of the backing arrays is trimmed back to snug
+        tile-aligned sizes when at least a quarter of the allocation is
+        slack (so steady append streams never realloc-thrash). Everything
+        observable about the *retained* versions — ``rows_at``/``items_at``
+        watermarks, ``delta_bits`` masks, item ids, supports — is unchanged.
+        """
+        if keep_versions is not None and keep_versions <= 0:
+            raise ValueError(f"keep_versions must be positive, got {keep_versions}")
+        with self._lock:
+            return self._compact_locked(
+                self.keep_versions if keep_versions is None else keep_versions
+            )
+
+    def _compact_locked(self, keep: int) -> dict:
+        floor = self.version - keep
+        dropped = [v for v in self._watermarks if v < floor]
+        for v in dropped:
+            del self._watermarks[v]
+        freed = 0
+        item_cap, word_cap = self._bits.shape
+        snug_items = max(_MIN_ITEM_CAP, self._n_items)
+        snug_words = max(self.word_tile, self._n_words)
+        if snug_items * snug_words <= (item_cap * word_cap * 3) // 4:
+            bits = np.zeros((snug_items, snug_words), dtype=np.uint32)
+            bits[: self._n_items, : self._n_words] = self._bits[
+                : self._n_items, : self._n_words
+            ]
+            freed = self._bits.nbytes - bits.nbytes
+            self._bits = bits
+            if snug_items < item_cap:
+                for name in ("_value", "_col", "_freq", "_min_row"):
+                    setattr(self, name, getattr(self, name)[:snug_items].copy())
+        # only the current version's placement cache stays warm
+        self._device = {
+            v: d for v, d in self._device.items() if v == self.version
+        }
+        self.compactions += 1
+        return {
+            "dropped_versions": len(dropped),
+            "retained_versions": len(self._watermarks),
+            "freed_bytes": int(freed),
+        }
+
+    def has_version(self, version: int) -> bool:
+        """Is this version's watermark still addressable (not compacted away)?"""
+        with self._lock:
+            return version in self._watermarks
 
     # -- snapshots ----------------------------------------------------------
 
@@ -250,9 +352,11 @@ class DatasetStore:
             return mask_delta_words(self._bits[: self._n_items, : self._n_words], base_rows)
 
     def device_bits(self, version: int | None = None):
-        """Full bitset matrix on the JAX device, uploaded once per version
-        and shared by every mining request at that version (the jnp/pallas
-        engines' level-1 bits are a device-side gather of this array).
+        """Full bitset matrix placed for the store's placement, once per
+        version and shared by every mining request at that version (the
+        device placements' level-1 bits are a device-side gather of this
+        array). With a ``MeshPlacement`` this is the word-sharded resident
+        copy — the store's tile alignment guarantees zero re-packing.
 
         ``version`` pins the expected store version: if appends have already
         moved the store past it, returns None and the caller falls back to
@@ -263,8 +367,12 @@ class DatasetStore:
                 return None
             cached = self._device.get(self.version)
             if cached is None:
-                import jax.numpy as jnp
+                view = self._bits[: self._n_items, : self._n_words]
+                if self.placement is not None:
+                    cached = self.placement.put_bits(view)
+                else:
+                    import jax.numpy as jnp
 
-                cached = jnp.asarray(self._bits[: self._n_items, : self._n_words])
+                    cached = jnp.asarray(view)
                 self._device[self.version] = cached
             return cached

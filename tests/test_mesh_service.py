@@ -1,0 +1,85 @@
+"""Full service cycle on an 8-device host-platform mesh == single-device.
+
+The word-sharded ``DatasetStore`` (MeshPlacement-aligned tiles) must serve
+append -> incremental mine -> report with answers bit-identical to the
+single-device store, and mesh-placed cold mining must match the
+numpy/jnp/pallas reference engines on itemsets, counts AND per-level stats.
+
+XLA device count must be set before jax initialises, so the check runs in a
+subprocess (same pattern as tests/test_sharded_driver.py).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+import jax
+from repro.core import KyivConfig, MeshPlacement, mine
+from repro.service import IncrementalConfig, MiningService
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+placement = MeshPlacement(mesh, pair_axes=("data",), word_axis="model")
+rng = np.random.default_rng(19)
+base = rng.integers(0, 5, size=(220, 5))
+delta = rng.integers(0, 5, size=(18, 5))
+
+def stat_tuple(s):
+    return (s.k, s.candidates, s.support_pruned, s.bound_pruned,
+            s.intersections, s.emitted, s.skipped_absent_uniform, s.stored)
+
+# mesh-placed cold mining == every single-device reference engine,
+# on itemsets, counts and the per-level counters
+D = np.concatenate([base, delta])
+mesh_cold = mine(D, KyivConfig(tau=2, kmax=3, placement=placement))
+for engine in ("numpy", "jnp", "pallas"):
+    ref = mine(D, KyivConfig(tau=2, kmax=3, engine=engine))
+    assert sorted(ref.itemsets) == sorted(mesh_cold.itemsets), engine
+    assert list(map(stat_tuple, ref.stats)) == list(map(stat_tuple, mesh_cold.stats)), engine
+
+# full service cycle: append -> mine (cold) -> cache -> append ->
+# incremental mine -> report, word-sharded store vs single-device store
+svc = MiningService.from_dataset(
+    base, placement=placement, incremental=IncrementalConfig(max_delta_fraction=0.5))
+ref = MiningService.from_dataset(
+    base, incremental=IncrementalConfig(max_delta_fraction=0.5))
+assert svc.store.n_words % placement.word_shards == 0
+assert svc.stats()["placement"]["word_shards"] == 4
+
+m1, h1 = svc.mine(tau=2, kmax=3), ref.mine(tau=2, kmax=3)
+assert (m1.source, h1.source) == ("cold", "cold")
+assert sorted(m1.result.itemsets) == sorted(h1.result.itemsets)
+assert svc.mine(tau=2, kmax=3).source == "cache"
+
+svc.append(delta); ref.append(delta)
+m2, h2 = svc.mine(tau=2, kmax=3), ref.mine(tau=2, kmax=3)
+assert m2.source == "incremental", m2.source
+assert sorted(m2.result.itemsets) == sorted(h2.result.itemsets)
+assert sorted(m2.result.itemsets) == sorted(mesh_cold.itemsets)
+
+rm, rh = svc.report(tau=2, kmax=3), ref.report(tau=2, kmax=3)
+for key in ("n_quasi_identifiers", "n_rows", "by_size", "risky_columns",
+            "unique_records"):
+    assert rm[key] == rh[key], key
+
+svc.close(); ref.close()
+print("MESH_SERVICE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_mesh_service_cycle_equals_single_device_8dev():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, src],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MESH_SERVICE_OK" in proc.stdout

@@ -359,6 +359,159 @@ def test_http_error_handling(http_service):
     assert e.value.code == 400
 
 
+# ---------------------------------------------------------------------------
+# Store compaction
+# ---------------------------------------------------------------------------
+
+
+def test_store_compaction_preserves_retained_versions():
+    """Auto-compaction drops only old watermarks; every retained version's
+    rows_at/delta_bits and the table content itself are unchanged."""
+    blocks = [_rand(s, 30, 4, 5) for s in range(6)]
+    store = DatasetStore(4, compact_threshold=4, keep_versions=2)
+    ref = DatasetStore(4)
+    for b in blocks:
+        store.append(b)
+        ref.append(b)
+    assert store.compactions >= 1
+    assert not store.has_version(1)  # consolidated into the base
+    for v in range(store.version - 2, store.version + 1):  # retained window
+        assert store.has_version(v)
+        assert store.rows_at(v) == ref.rows_at(v)
+        np.testing.assert_array_equal(store.delta_bits(v)[0], ref.delta_bits(v)[0])
+    t, r = store.item_table(), itemize(np.concatenate(blocks))
+    got = {
+        (int(t.col[i]), int(t.value[i])): tuple(bits_to_rows(t.bits[i]).tolist())
+        for i in range(t.n_items)
+    }
+    want = {
+        (int(r.col[i]), int(r.value[i])): tuple(r.rows_of(i).tolist())
+        for i in range(r.n_items)
+    }
+    assert got == want
+
+
+def test_store_manual_compaction_trims_capacity():
+    store = DatasetStore(3, word_tile=8)
+    for s in range(5):
+        store.append(_rand(s, 100, 3, 6))
+    cap_before = store._bits.nbytes
+    info = store.compact(keep_versions=2)
+    assert info["dropped_versions"] >= 1
+    assert store._bits.nbytes <= cap_before
+    assert store.n_words % store.word_tile == 0
+    t = store.item_table()
+    assert t.n_rows == 500 and t.bits.shape[0] == t.n_items
+
+
+def test_store_compaction_config_validation():
+    # thrash guard: a threshold the retained watermarks can never get under
+    with pytest.raises(ValueError):
+        DatasetStore(3, compact_threshold=4, keep_versions=8)
+    with pytest.raises(ValueError):
+        DatasetStore(3).compact(keep_versions=0)
+
+
+def test_store_auto_compaction_does_not_thrash():
+    """Steady appends between compactions: each auto-compaction must drop
+    something, not re-fire (and re-copy the matrix) on every append."""
+    store = DatasetStore(4, compact_threshold=6, keep_versions=2)
+    for s in range(20):
+        store.append(_rand(s, 10, 4, 5))
+    assert store.compactions <= 20 // (6 - (2 + 1)) + 1
+
+
+def test_service_incremental_falls_back_cold_after_compaction():
+    """A cached base whose version watermark was compacted away can no longer
+    seed the delta miner — the service re-mines cold, bit-identically."""
+    base, d1, d2 = _rand(0, 200, 4, 5), _rand(1, 10, 4, 5), _rand(2, 10, 4, 5)
+    svc = MiningService.from_dataset(base)
+    svc.mine(tau=1, kmax=3)  # cached at version 1
+    svc.append(d1)
+    svc.append(d2)
+    svc.store.compact(keep_versions=1)  # drops versions 1 and 2
+    assert not svc.store.has_version(1)
+    r = svc.mine(tau=1, kmax=3)
+    assert r.source == "cold"
+    cold = mine(np.concatenate([base, d1, d2]), KyivConfig(tau=1, kmax=3))
+    assert _value_sets(r.result) == _value_sets(cold)
+    assert svc.stats()["store"]["compactions"] == 1
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# HTTP hardening: bearer auth + bounded in-flight queue
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def hardened_http_service():
+    from repro.launch.serve_miner import make_server
+
+    svc = MiningService.from_dataset(_rand(0, 120, 4, 5))
+    server = make_server(svc, port=0, auth_token="tok3n", max_inflight=2)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    yield svc, server
+    server.shutdown()
+    server.server_close()
+    svc.close()
+
+
+def _req_auth(port, path, token=None, payload=None):
+    headers = {"Content-Type": "application/json"}
+    if token is not None:
+        headers["Authorization"] = f"Bearer {token}"
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{port}{path}",
+        data=json.dumps(payload).encode() if payload is not None else None,
+        headers=headers,
+    )
+    resp = urllib.request.urlopen(req, timeout=30)
+    return resp.status, json.loads(resp.read())
+
+
+def test_http_bearer_auth(hardened_http_service):
+    _, server = hardened_http_service
+    port = server.server_address[1]
+    # liveness is never gated
+    assert _req_auth(port, "/healthz")[1] == {"ok": True}
+    # missing, wrong, and non-ASCII tokens -> 401 (never a 500 leak)
+    for token in (None, "wrong", "café"):
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _req_auth(port, "/mine?tau=1&kmax=2", token=token)
+        assert e.value.code == 401
+    code, body = _req_auth(port, "/mine?tau=1&kmax=2", token="tok3n")
+    assert code == 200 and body["source"] == "cold"
+    code, stats = _req_auth(port, "/stats", token="tok3n")
+    assert stats["http"]["auth"] is True
+    assert stats["http"]["unauthorized"] == 3
+    assert stats["http"]["served"] >= 2
+    assert stats["placement"]["kind"] == "host"
+    assert "hits" in stats["executables"] and "misses" in stats["executables"]
+
+
+def test_http_bounded_queue_returns_429(hardened_http_service):
+    _, server = hardened_http_service
+    port = server.server_address[1]
+    sem = server.RequestHandlerClass.inflight
+    # saturate the in-flight bound as two stuck requests would
+    assert sem.acquire(blocking=False) and sem.acquire(blocking=False)
+    try:
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _req_auth(port, "/stats", token="tok3n")
+        assert e.value.code == 429
+        # liveness still answers while the queue is full
+        assert _req_auth(port, "/healthz")[1] == {"ok": True}
+    finally:
+        sem.release()
+        sem.release()
+    code, stats = _req_auth(port, "/stats", token="tok3n")
+    assert code == 200
+    assert stats["http"]["rejected"] == 1
+    assert stats["http"]["max_inflight"] == 2
+
+
 def test_concurrent_http_requests_coalesce(http_service):
     svc, port = http_service
     svc.cache.clear()
