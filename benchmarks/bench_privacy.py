@@ -1,0 +1,184 @@
+"""Privacy risk engine benchmark: coverage kernels vs the python loop, and
+planner end-to-end time.
+
+Two measurements on one synthetic *exposed* table (frequent background with
+planted singleton- and pair-quasi-identifiers, ``data.synth.exposed_dataset``
+— the shape where QI counts scale linearly with rows, so the bench runs at
+the criterion's 100k rows without the τ=1 QI explosion of the fully
+randomized table):
+
+1. **coverage** — per-record risk profiling of a mined result. Baseline is
+   the seed implementation of ``sdc.quasi.unique_records``: a Python loop
+   over itemsets with per-word bit twiddling to expand each QI's row set.
+   The engine path batches every QI through ``kernels.coverage``
+   (AND + bit-plane accumulation, numpy/jnp engines here; Pallas and mesh
+   are covered by the tests). Acceptance: **>= 10x** over the python loop at
+   100k rows. The engine's answers are asserted identical to the loop's.
+2. **planner** — ``plan_anonymization`` end-to-end (greedy weighted set
+   cover + verification re-mines until zero residual QIs), recorded for the
+   trajectory; the plan must verify.
+
+Results are appended to ``BENCH_privacy.json`` next to this file (a list of
+runs, one per invocation). Default is the criterion-sized 100k-row config;
+``--n`` scales it down for CI smoke.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import KyivConfig, mine  # noqa: E402
+from repro.core.placement import make_placement  # noqa: E402
+from repro.data.synth import exposed_dataset  # noqa: E402
+from repro.privacy import apply_plan, mine_masked, plan_anonymization  # noqa: E402
+from repro.privacy.risk import risk_profile  # noqa: E402
+
+try:  # package-relative when run via benchmarks.run
+    from .common import Row, emit
+except ImportError:  # direct `python benchmarks/bench_privacy.py`
+    from common import Row, emit  # type: ignore
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_privacy.json")
+
+
+def _bits_to_rows_slow(bits_row: np.ndarray) -> np.ndarray:
+    """The seed repo's per-word Python bit twiddling (pre-vectorisation)."""
+    out = []
+    for w, word in enumerate(np.asarray(bits_row, dtype=np.uint32)):
+        word = int(word)
+        base = w * 32
+        while word:
+            lsb = word & -word
+            out.append(base + lsb.bit_length() - 1)
+            word ^= lsb
+    return np.asarray(out, dtype=np.int64)
+
+
+def python_loop_profile(result) -> tuple[int, np.ndarray]:
+    """Seed-style record profiling: per-itemset AND + Python row expansion
+    (exactly the old ``sdc.quasi.unique_records`` loop, plus the per-record
+    counter the risk engine also produces)."""
+    table = result.prep.table
+    hit = np.zeros(table.n_rows, dtype=bool)
+    qi_count = np.zeros(table.n_rows, dtype=np.int64)
+    for ids, _ in result.itemsets:
+        m = table.bits[ids[0]].copy()
+        for i in ids[1:]:
+            m &= table.bits[i]
+        rows = _bits_to_rows_slow(m)
+        hit[rows] = True
+        qi_count[rows] += 1
+    return int(hit.sum()), qi_count
+
+
+def run(*, n=100_000, m=6, tau=1, kmax=3, planner_n=None, seed=0):
+    dataset = exposed_dataset(n, m, seed=seed)
+    rows: list[Row] = []
+    record: dict = {
+        "n": n, "m": m, "tau": tau, "kmax": kmax,
+        "timestamp": time.time(), "platform": platform.platform(),
+    }
+
+    t0 = time.perf_counter()
+    result = mine(dataset, KyivConfig(tau=tau, kmax=kmax, engine="numpy"))
+    mine_s = time.perf_counter() - t0
+    record["mine_s"] = mine_s
+    record["n_qis"] = len(result.itemsets)
+    rows.append(Row("privacy/mine", mine_s * 1e6, f"n_qis={len(result.itemsets)}"))
+
+    t0 = time.perf_counter()
+    loop_unique, loop_counts = python_loop_profile(result)
+    loop_s = time.perf_counter() - t0
+    record["python_loop_s"] = loop_s
+    rows.append(Row("privacy/python_loop", loop_s * 1e6, f"unique={loop_unique}"))
+
+    for engine in ("numpy", "jnp"):
+        placement = make_placement(engine if engine != "numpy" else "host")
+        t0 = time.perf_counter()
+        prof = risk_profile(result, placement=placement)
+        cov_s = time.perf_counter() - t0
+        assert prof.records_at_risk == loop_unique, (prof.records_at_risk, loop_unique)
+        assert np.array_equal(prof.qi_count, loop_counts)
+        speedup = loop_s / max(cov_s, 1e-9)
+        record[f"coverage_{engine}_s"] = cov_s
+        record[f"coverage_{engine}_speedup"] = speedup
+        rows.append(
+            Row(f"privacy/coverage_{engine}", cov_s * 1e6, f"speedup={speedup:.1f}x")
+        )
+    best = max(record["coverage_numpy_speedup"], record["coverage_jnp_speedup"])
+    record["criterion"] = ">=10x over python loop at 100k rows"
+    record["speedup_ge_10x"] = bool(best >= 10.0)
+
+    # planner end-to-end (smaller table: it re-mines per verification round)
+    planner_n = planner_n or max(n // 5, 1000)
+    pdata = exposed_dataset(planner_n, m, seed=seed + 1)
+    t0 = time.perf_counter()
+    plan = plan_anonymization(pdata, tau=tau, kmax=kmax)
+    plan_s = time.perf_counter() - t0
+    assert plan.verified, "planner failed to verify zero residual QIs"
+    post = mine_masked(apply_plan(pdata, plan), KyivConfig(tau=tau, kmax=kmax))
+    assert post is None or len(post.itemsets) == 0
+    record["planner"] = {
+        "n": planner_n,
+        "m": m,
+        "seconds": plan_s,
+        "rounds": plan.rounds,
+        "initial_qis": plan.initial_qis,
+        "cells_suppressed": plan.cells_suppressed,
+        "generalized_columns": plan.generalized_columns,
+    }
+    rows.append(
+        Row(
+            "privacy/planner_e2e",
+            plan_s * 1e6,
+            f"n={planner_n} rounds={plan.rounds} cells={plan.cells_suppressed}",
+        )
+    )
+    return rows, record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--m", type=int, default=6)
+    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--kmax", type=int, default=3)
+    ap.add_argument("--planner-n", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rows, record = run(
+        n=args.n, m=args.m, tau=args.tau, kmax=args.kmax,
+        planner_n=args.planner_n, seed=args.seed,
+    )
+    emit(rows)
+
+    history = []
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            history = json.load(f)
+    history.append(record)
+    with open(OUT_PATH, "w") as f:
+        json.dump(history, f, indent=2)
+    print(f"wrote {OUT_PATH}")
+    print(
+        f"PRIVACY_BENCH n={args.n} qis={record['n_qis']} "
+        f"loop={record['python_loop_s']:.2f}s "
+        f"numpy={record['coverage_numpy_s']:.3f}s "
+        f"({record['coverage_numpy_speedup']:.0f}x) "
+        f"ge_10x={record['speedup_ge_10x']} "
+        f"planner={record['planner']['seconds']:.2f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

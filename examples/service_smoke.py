@@ -8,7 +8,9 @@ requests with stdlib urllib, and asserts the caching/incremental contract:
   3. /append bumps the version,
   4. /mine after the append is served (incrementally or cold) with the new
      version and a repeat hits the cache again,
-  5. /report agrees with /mine.
+  5. /report agrees with /mine,
+  6. /risk agrees with /report, repeats hit the privacy cache, and
+     /anonymize returns a verified zero-residual plan.
 
 Used by the CI service smoke job; also runnable directly:
 
@@ -92,9 +94,18 @@ def main() -> None:
 
         rep = req("/report?tau=1&kmax=3")
         assert rep["n_quasi_identifiers"] == m3["n_itemsets"], rep
+        assert "top_risk_records" in rep and "risk_histogram" in rep
+
+        risk = req("/risk?tau=1&kmax=3&top=5")
+        assert risk["records_at_risk"] == rep["unique_records"], risk
+        assert req("/risk?tau=1&kmax=3&top=5")["source"] == "privacy-cache"
+
+        plan = req("/anonymize?tau=1&kmax=3")
+        assert plan["verified"] and plan["residual_qis"] == 0, plan
 
         stats = req("/stats")
         assert stats["cache"]["hits"] >= 2, stats
+        assert stats["privacy"]["entries"] >= 2, stats
 
         print(
             "SERVICE_SMOKE_OK "

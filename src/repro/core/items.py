@@ -52,16 +52,15 @@ def bits_popcount(bits: np.ndarray) -> np.ndarray:
 
 
 def bits_to_rows(bits_row: np.ndarray) -> np.ndarray:
-    """Expand one bitset row back into sorted row indices (for tests/emission)."""
-    out = []
-    for w, word in enumerate(np.asarray(bits_row, dtype=np.uint32)):
-        word = int(word)
-        base = w * WORD_BITS
-        while word:
-            lsb = word & -word
-            out.append(base + lsb.bit_length() - 1)
-            word ^= lsb
-    return np.asarray(out, dtype=np.int64)
+    """Expand one bitset row back into sorted row indices.
+
+    Vectorised: the words are forced little-endian and unpacked bit-by-bit,
+    so bit ``b`` of word ``w`` lands at index ``w * 32 + b`` exactly —
+    previously a per-word Python loop, now one ``np.unpackbits``.
+    """
+    words = np.ascontiguousarray(np.asarray(bits_row, dtype=np.uint32)).astype("<u4")
+    unpacked = np.unpackbits(words.view(np.uint8), bitorder="little")
+    return np.nonzero(unpacked)[0].astype(np.int64)
 
 
 @dataclasses.dataclass
@@ -97,6 +96,20 @@ class ItemTable:
     def describe(self, item: int) -> tuple[int, int]:
         """(value, column) — 1-based column in paper notation is col+1."""
         return int(self.value[item]), int(self.col[item])
+
+    def to_dataset(self) -> np.ndarray:
+        """Reconstruct the (n_rows, n_cols) dataset from the item bitsets.
+
+        Every cell belongs to exactly one item by construction, so scattering
+        each item's value over its row set rebuilds the table — what lets the
+        resident service (which keeps only the itemized form) hand a raw
+        table to the anonymization planner.
+        """
+        out = np.zeros((self.n_rows, self.n_cols), dtype=np.int64)
+        for i in range(self.n_items):
+            rows = bits_to_rows(self.bits[i])
+            out[rows[rows < self.n_rows], self.col[i]] = self.value[i]
+        return out
 
 
 def itemize(dataset: np.ndarray) -> ItemTable:

@@ -20,6 +20,15 @@ questions every consumer was answering ad hoc:
 4. **layout** — what word-tile multiple keeps stored bitsets placeable with
    zero re-packing (:attr:`~BitsetPlacement.store_word_tile`).
 
+The same four answers serve two workloads: the mining level batches
+(:meth:`~BitsetPlacement.prepare` / :meth:`~BitsetPlacement.dispatch`,
+orchestrated by ``kernels.intersect.ops.LevelPipeline``) and the privacy
+risk engine's record-coverage queries
+(:meth:`~BitsetPlacement.prepare_coverage` /
+:meth:`~BitsetPlacement.coverage_dispatch`, orchestrated by
+``kernels.coverage.ops.CoverageEngine``) — itemset-level and record-level
+questions over the same resident bitsets.
+
 The generic batch orchestration (locality sort, async handles, padding
 strips, inverse permutation) lives once in
 ``kernels.intersect.ops.LevelPipeline``, which takes a placement instead of
@@ -102,6 +111,18 @@ class BitsetPlacement(Protocol):
         """Place a long-lived bitset matrix (the dataset store's cache)."""
         ...
 
+    def prepare_coverage(self, bits):
+        """Make an item bitset matrix resident for record-coverage queries
+        (the privacy risk engine); returns an opaque state consumed by
+        :meth:`coverage_dispatch` for every itemset batch."""
+        ...
+
+    def coverage_dispatch(self, state, padded_sets: np.ndarray, padded_weights: np.ndarray):
+        """Execute one padded coverage batch (``kernels.coverage``):
+        returns the ``(32, W)`` int32 accumulator as a placement-native
+        array. Batch padding rows carry weight 0."""
+        ...
+
     def describe(self) -> dict:
         """Human/JSON-friendly placement info for ``/stats``."""
         ...
@@ -138,6 +159,14 @@ class HostPlacement:
 
     def put_bits(self, bits: np.ndarray):
         return np.ascontiguousarray(bits)
+
+    def prepare_coverage(self, bits):
+        return np.ascontiguousarray(np.asarray(bits, dtype=np.uint32))
+
+    def coverage_dispatch(self, state, padded_sets, padded_weights):
+        from ..kernels.coverage.ref import coverage_accumulate_host
+
+        return coverage_accumulate_host(state, padded_sets, padded_weights)
 
     def describe(self) -> dict:
         return {"kind": self.kind, "engine": "numpy", "devices": 0}
@@ -224,6 +253,34 @@ class DevicePlacement:
 
     def put_bits(self, bits: np.ndarray):
         return jnp.asarray(bits)
+
+    def prepare_coverage(self, bits):
+        return jnp.asarray(bits)
+
+    def coverage_dispatch(self, state, padded_sets, padded_weights):
+        from ..kernels.coverage import ops as _cov
+
+        n_words = int(state.shape[1])
+        bucket, width = int(padded_sets.shape[0]), int(padded_sets.shape[1])
+        key = (
+            "coverage",
+            self.engine,
+            width,
+            n_words,
+            bucket,
+            self.block_words,
+            self.interpret,
+        )
+        fn = _cov.EXEC_CACHE.get(
+            key,
+            lambda: _cov.build_coverage_dispatch(
+                self.engine,
+                n_words=n_words,
+                block_words=self.block_words,
+                interpret=self.interpret,
+            ),
+        )
+        return fn(state, jnp.asarray(padded_sets), jnp.asarray(padded_weights))
 
     def describe(self) -> dict:
         return {
@@ -339,6 +396,28 @@ class MeshPlacement:
 
             bits = pad_words(np.ascontiguousarray(bits), self.word_shards)
         return jax.device_put(bits, self._bits_sharding)
+
+    def prepare_coverage(self, bits):
+        return self.put_bits(bits)
+
+    def coverage_dispatch(self, state, padded_sets, padded_weights):
+        from ..kernels.coverage import ops as _cov
+        from . import sharded as _sh
+
+        width = int(padded_sets.shape[1])
+        key = ("coverage-mesh", self.mesh, self.pair_axes, self.word_axis, width)
+        fn = _cov.EXEC_CACHE.get(
+            key,
+            lambda: _sh.sharded_coverage_step(
+                self.mesh,
+                pair_axes=self.pair_axes,
+                word_axis=self.word_axis,
+                n_set_items=width,
+            )[0],
+        )
+        sets_j = jax.device_put(jnp.asarray(padded_sets), self._pairs_sharding)
+        wt_j = jax.device_put(jnp.asarray(padded_weights), self._minp_sharding)
+        return fn(state, sets_j, wt_j)
 
     def describe(self) -> dict:
         return {

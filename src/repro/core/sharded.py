@@ -45,6 +45,7 @@ __all__ = [
     "sharded_level_count_step",
     "sharded_level_classify_step",
     "sharded_level_classify_count_step",
+    "sharded_coverage_step",
     "make_sharded_intersect",
     "make_sharded_pipeline",
     "pad_words",
@@ -169,6 +170,51 @@ def sharded_level_classify_count_step(
     fn = shard_map(
         functools.partial(
             _local_intersect_classify, word_axis=word_axis, write_children=False
+        ),
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    return jax.jit(fn), in_specs, out_specs
+
+
+def _local_coverage(bits_ref, sets, weights, *, pair_axes, n_set_items):
+    """Shard-local coverage body (``kernels.coverage`` semantics): K-way AND
+    over locally-held bitset words, bit-plane accumulation weighted per set,
+    then a psum over the pair axes — words stay sharded, the set axis is
+    reduced away, so the only collective is the accumulator psum (the
+    record-coverage analogue of the level body's popcount psum)."""
+    mask = jnp.take(bits_ref, sets[:, 0], axis=0)
+    for t in range(1, n_set_items):
+        mask = jnp.bitwise_and(mask, jnp.take(bits_ref, sets[:, t], axis=0))
+    wt = weights.astype(jnp.int32)[:, None]
+    rows = []
+    for b in range(32):
+        sel = (jnp.right_shift(mask, jnp.uint32(b)) & jnp.uint32(1)).astype(jnp.int32)
+        rows.append(jnp.sum(sel * wt, axis=0))
+    acc = jnp.stack(rows, axis=0)
+    return jax.lax.psum(acc, pair_axes)
+
+
+def sharded_coverage_step(
+    mesh: Mesh,
+    *,
+    pair_axes: tuple[str, ...] = ("data",),
+    word_axis: str | None = "model",
+    n_set_items: int = 3,
+):
+    """Record-coverage body: (bits, sets, weights) -> acc (32, W).
+
+    bits: (t, W) uint32, sharded P(None, word_axis);
+    sets: (M, n_set_items) int32, sharded P(pair_axes, None);
+    weights: (M,) int32, sharded P(pair_axes);
+    acc: (32, W) int32, sharded P(None, word_axis) — replicated over pairs.
+    """
+    in_specs = (P(None, word_axis), P(pair_axes, None), P(pair_axes))
+    out_specs = P(None, word_axis)
+    fn = shard_map(
+        functools.partial(
+            _local_coverage, pair_axes=pair_axes, n_set_items=n_set_items
         ),
         mesh=mesh,
         in_specs=in_specs,

@@ -17,12 +17,53 @@ import numpy as np
 
 __all__ = [
     "randomized_dataset",
+    "exposed_dataset",
     "connect_like",
     "pumsb_like",
     "poker_like",
     "uscensus_like",
     "DATASETS",
 ]
+
+
+def exposed_dataset(
+    n: int,
+    m: int = 6,
+    base_domain: int = 5,
+    exposed_frac: float = 0.1,
+    pair_domains: tuple[int, int] = (120, 127),
+    seed: int = 0,
+) -> np.ndarray:
+    """Frequent background with planted rare structure — the privacy-risk
+    stress shape (§1's AOL exposure, controllable at any row count).
+
+    A ``base_domain``-ary random table (every item frequent) in which an
+    ``exposed_frac`` fraction of rows is made re-identifiable:
+
+    * half carry a **unique value** in column 0 — singleton quasi-identifiers;
+    * half carry an engineered value **pair** in columns 1-2: values cycle
+      through coprime domains, so each *value* occurs ~``e / domain`` times
+      (frequent, for τ below that) while each *combination* occurs at most
+      ``ceil(e / (P * Q))`` times — minimal infrequent pairs.
+
+    Unlike ``randomized_dataset`` (where QI counts explode with n at τ=1),
+    the number of planted QIs scales linearly and mining stays cheap, so
+    record-coverage and planner benchmarks can run at paper-scale row counts.
+    """
+    rng = np.random.default_rng(seed)
+    out = rng.integers(0, base_domain, size=(n, m)).astype(np.int64)
+    e = int(n * exposed_frac)
+    if e == 0 or m < 3:
+        return out
+    rows = rng.choice(n, size=e, replace=False)
+    half = e // 2
+    out[rows[:half], 0] = 10_000 + np.arange(half)
+    pair_rows = rows[half:]
+    k = len(pair_rows)
+    p, q = pair_domains
+    out[pair_rows, 1] = 10_000 + (np.arange(k) % p)
+    out[pair_rows, 2] = 10_000 + (np.arange(k) % q)
+    return out
 
 
 def randomized_dataset(

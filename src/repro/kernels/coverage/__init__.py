@@ -1,0 +1,25 @@
+from .coverage import coverage_accumulate_indexed
+from .ops import (
+    EXEC_CACHE,
+    CoverageEngine,
+    build_coverage_dispatch,
+    coverage_cache_stats,
+    reset_coverage_cache,
+)
+from .ref import (
+    acc_to_record_counts,
+    coverage_accumulate_host,
+    coverage_accumulate_ref,
+)
+
+__all__ = [
+    "coverage_accumulate_indexed",
+    "coverage_accumulate_host",
+    "coverage_accumulate_ref",
+    "acc_to_record_counts",
+    "CoverageEngine",
+    "build_coverage_dispatch",
+    "coverage_cache_stats",
+    "reset_coverage_cache",
+    "EXEC_CACHE",
+]

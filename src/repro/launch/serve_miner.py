@@ -14,6 +14,8 @@ Endpoints (JSON in / JSON out):
                   "max_itemsets": 100}                  -> itemsets + source
   GET  /mine?tau=1&kmax=3                               -> same, query form
   GET  /report?tau=1&kmax=3                             -> sdc quasi-id report
+  GET  /risk?tau=1&kmax=3&top=10                        -> per-record risk profile
+  GET  /anonymize?tau=1&kmax=3                          -> verified masking plan
   GET  /stats                                           -> store/placement/cache/exec/http stats
   GET  /healthz                                         -> liveness (never gated)
 
@@ -144,6 +146,18 @@ class MinerHandler(BaseHTTPRequestHandler):
             )
         elif route == "/report":
             self._send(200, self.service.report(**_mine_params(payload)))
+        elif route == "/risk":
+            top = int(payload.get("top", 10))
+            self._send(200, self.service.risk(**_mine_params(payload), top=top))
+        elif route == "/anonymize":
+            max_sup = payload.get("max_suppressions")
+            self._send(
+                200,
+                self.service.anonymize_plan(
+                    **_mine_params(payload),
+                    max_suppressions=int(max_sup) if max_sup is not None else 200,
+                ),
+            )
         else:
             self._send(404, {"error": f"unknown route {route}"})
 

@@ -5,6 +5,11 @@ the AOL incident: given a categorical table, report every minimal attribute
 combination occurring ≤ τ times — the quasi-identifiers — plus k-anonymity
 risk summaries, and the grouping transform of §1.1 (bucket values so each
 value occurs at least k times).
+
+Record-level numbers (``unique_records`` and the risk fields of
+``report_as_dict``) are served by the privacy coverage engine
+(``repro.privacy.risk`` over the ``kernels.coverage`` kernels) — the old
+per-itemset Python loops remain only as thin signature-compatible wrappers.
 """
 
 from __future__ import annotations
@@ -28,10 +33,22 @@ class QuasiIdentifierReport:
     result: MiningResult
     tau: int
     kmax: int
+    _profile: "object | None" = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def n_quasi_identifiers(self) -> int:
         return len(self.result.itemsets)
+
+    def profile(self):
+        """The record-level :class:`repro.privacy.risk.RiskProfile`, computed
+        once through the coverage kernels (placement from the mining config)."""
+        if self._profile is None:
+            from ..privacy.risk import risk_profile
+
+            self._profile = risk_profile(self.result)
+        return self._profile
 
     def by_size(self) -> dict[int, int]:
         out: dict[int, int] = {}
@@ -42,26 +59,19 @@ class QuasiIdentifierReport:
     def risky_columns(self) -> dict[int, int]:
         """How many quasi-identifiers touch each column — prioritises masking."""
         table = self.result.prep.table
-        out: dict[int, int] = {}
-        for ids, _ in self.result.itemsets:
-            for i in ids:
-                c = int(table.col[i])
-                out[c] = out.get(c, 0) + 1
-        return out
+        if not self.result.itemsets:
+            return {}
+        ids = np.fromiter(
+            (i for itemset, _ in self.result.itemsets for i in itemset),
+            dtype=np.int64,
+        )
+        counts = np.bincount(table.col[ids], minlength=table.n_cols)
+        return {int(c): int(n) for c, n in enumerate(counts) if n}
 
     def unique_records(self) -> int:
-        """Rows pinpointed by at least one τ-infrequent combination."""
-        from ..core.items import bits_to_rows
-
-        table = self.result.prep.table
-        hit = np.zeros(table.n_rows, dtype=bool)
-        for ids, _ in self.result.itemsets:
-            m = table.bits[ids[0]].copy()
-            for i in ids[1:]:
-                m &= table.bits[i]
-            rows = bits_to_rows(m)
-            hit[rows] = True
-        return int(hit.sum())
+        """Rows pinpointed by at least one τ-infrequent combination (thin
+        wrapper over the coverage engine's record counts)."""
+        return self.profile().records_at_risk
 
 
 def find_quasi_identifiers(
@@ -71,9 +81,10 @@ def find_quasi_identifiers(
     return QuasiIdentifierReport(result=res, tau=tau, kmax=kmax)
 
 
-def report_as_dict(report: QuasiIdentifierReport) -> dict:
+def report_as_dict(report: QuasiIdentifierReport, *, top: int = 10) -> dict:
     """JSON-serialisable summary of a report — the payload of the resident
     mining service's ``/report`` endpoint."""
+    prof = report.profile()
     return {
         "tau": report.tau,
         "kmax": report.kmax,
@@ -81,6 +92,8 @@ def report_as_dict(report: QuasiIdentifierReport) -> dict:
         "by_size": {str(k): v for k, v in sorted(report.by_size().items())},
         "risky_columns": {str(k): v for k, v in sorted(report.risky_columns().items())},
         "unique_records": report.unique_records(),
+        "top_risk_records": prof.top_records(top),
+        "risk_histogram": prof.histogram(),
         "n_rows": report.result.prep.table.n_rows,
     }
 

@@ -9,6 +9,8 @@ motivates (a custodian continuously vetting a growing table):
     service.append(new_rows)             # itemizes only the block
     service.mine(tau=1, kmax=3)          # incremental: recount + boundary
     service.report(tau=1, kmax=3)        # sdc quasi-identifier summary
+    service.risk(tau=1, kmax=3)          # per-record risk (coverage kernels)
+    service.anonymize_plan(tau=1)        # verified zero-QI masking plan
 
 Request flow for ``mine``: snapshot the store (atomic version + immutable
 table) -> result-cache lookup -> request scheduler (concurrent identical
@@ -33,6 +35,7 @@ from ..core.items import ItemTable
 from ..core.kyiv import KyivConfig, MiningResult, mine_preprocessed
 from ..core.placement import resolve_placement
 from ..core.preprocess import preprocess
+from ..kernels.coverage import coverage_cache_stats
 from ..kernels.intersect import LevelPipeline, executable_cache_stats
 from ..sdc.quasi import QuasiIdentifierReport, report_as_dict
 from .cache import CacheEntry, ResultCache, make_key
@@ -43,6 +46,46 @@ from .store import DatasetStore
 __all__ = ["MineResponse", "MiningService"]
 
 _PREP_CACHE_CAPACITY = 8
+
+
+class _LruCache:
+    """Tiny thread-safe LRU for derived privacy payloads (risk profiles and
+    anonymization plans), keyed beside the mining result cache on
+    ``(kind, version, tau, kmax, ordering)`` — cheap to rebuild relative to
+    mining, so it stays separate from (and smaller than) the result LRU."""
+
+    def __init__(self, capacity: int = 32):
+        self.capacity = capacity
+        self._entries: "OrderedDict[tuple, object]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: tuple):
+        with self._lock:
+            value = self._entries.get(key)
+            if value is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return value
+
+    def put(self, key: tuple, value) -> None:
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+            }
 
 
 @dataclasses.dataclass
@@ -122,6 +165,7 @@ class MiningService:
         self.cache = ResultCache(cache_capacity)
         self.scheduler = RequestScheduler(max_workers=max_workers)
         self._preps: "OrderedDict[tuple, object]" = OrderedDict()
+        self._privacy = _LruCache()
         self._lock = threading.Lock()
 
     @classmethod
@@ -280,6 +324,19 @@ class MiningService:
 
     # -- reports ------------------------------------------------------------
 
+    def _risk_profile_for(self, resp: MineResponse) -> tuple[object, str]:
+        """The response's record-risk profile, via the privacy LRU; returns
+        ``(profile, source)`` where source is "privacy-cache" on a hit."""
+        from ..privacy.risk import risk_profile
+
+        key = ("risk", resp.version, resp.tau, resp.kmax, resp.ordering)
+        profile = self._privacy.get(key)
+        if profile is not None:
+            return profile, "privacy-cache"
+        profile = risk_profile(resp.result, placement=self.placement)
+        self._privacy.put(key, profile)
+        return profile, resp.source
+
     def report(
         self,
         tau: int = 1,
@@ -287,11 +344,80 @@ class MiningService:
         ordering: str = "ascending",
     ) -> dict:
         """Quasi-identifier report (sdc.quasi) over the current version,
-        served from the result cache when warm."""
+        served from the result cache when warm (the record-risk fields reuse
+        the privacy LRU's profile rather than re-running the coverage
+        kernels)."""
         resp = self.mine(tau=tau, kmax=kmax, ordering=ordering)
-        rep = QuasiIdentifierReport(result=resp.result, tau=tau, kmax=kmax)
+        profile, _ = self._risk_profile_for(resp)
+        rep = QuasiIdentifierReport(
+            result=resp.result, tau=tau, kmax=kmax, _profile=profile
+        )
         out = report_as_dict(rep)
         out.update(version=resp.version, source=resp.source, latency_s=resp.latency_s)
+        return out
+
+    # -- privacy risk engine -------------------------------------------------
+
+    def risk(
+        self,
+        tau: int = 1,
+        kmax: int = 3,
+        ordering: str = "ascending",
+        *,
+        top: int = 10,
+    ) -> dict:
+        """Record-level risk profile of the current version (coverage kernels
+        over the resident bitsets), cached per (version, tau, kmax) beside
+        the result LRU."""
+        t0 = time.perf_counter()
+        resp = self.mine(tau=tau, kmax=kmax, ordering=ordering)
+        profile, source = self._risk_profile_for(resp)
+        out = profile.summary(top=top)
+        out.update(
+            version=resp.version,
+            source=source,
+            latency_s=time.perf_counter() - t0,
+        )
+        return out
+
+    def anonymize_plan(
+        self,
+        tau: int = 1,
+        kmax: int = 3,
+        ordering: str = "ascending",
+        *,
+        max_rounds: int = 12,
+        max_suppressions: int | None = 200,
+    ) -> dict:
+        """Verified masking plan (zero residual quasi-identifiers) for the
+        current version. The table is reconstructed from the resident item
+        bitsets; the planner's verification re-mines reuse this service's
+        placement and warm executable buckets."""
+        from ..privacy.planner import plan_anonymization
+
+        t0 = time.perf_counter()
+        resp = self.mine(tau=tau, kmax=kmax, ordering=ordering)
+        key = ("plan", resp.version, tau, kmax, ordering, max_rounds)
+        plan = self._privacy.get(key)
+        source = "privacy-cache"
+        if plan is None:
+            dataset = resp.result.prep.table.to_dataset()
+            plan = plan_anonymization(
+                dataset,
+                tau=tau,
+                kmax=kmax,
+                config=self._request_config(tau, kmax, ordering),
+                max_rounds=max_rounds,
+                base_result=resp.result,
+            )
+            self._privacy.put(key, plan)
+            source = resp.source
+        out = plan.as_dict(max_suppressions=max_suppressions)
+        out.update(
+            version=resp.version,
+            source=source,
+            latency_s=time.perf_counter() - t0,
+        )
         return out
 
     # -- observability ------------------------------------------------------
@@ -310,8 +436,10 @@ class MiningService:
             },
             "placement": self.placement.describe(),
             "cache": self.cache.stats(),
+            "privacy": self._privacy.stats(),
             "scheduler": self.scheduler.stats(),
             "executables": executable_cache_stats(),
+            "coverage_executables": coverage_cache_stats(),
         }
 
     def compact(self, keep_versions: int | None = None) -> dict:

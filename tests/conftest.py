@@ -19,5 +19,6 @@ except ImportError:
         "test_items.py",
         "test_kyiv.py",
         "test_preprocess.py",
+        "test_privacy_prop.py",
         "test_support.py",
     ]

@@ -66,8 +66,19 @@ assert sorted(m2.result.itemsets) == sorted(mesh_cold.itemsets)
 
 rm, rh = svc.report(tau=2, kmax=3), ref.report(tau=2, kmax=3)
 for key in ("n_quasi_identifiers", "n_rows", "by_size", "risky_columns",
-            "unique_records"):
+            "unique_records", "top_risk_records", "risk_histogram"):
     assert rm[key] == rh[key], key
+
+# record-risk profiles (coverage kernels) served from the mesh placement
+# match the single-device service bit for bit
+km, kh = svc.risk(tau=2, kmax=3), ref.risk(tau=2, kmax=3)
+for key in ("records_at_risk", "max_risk", "mean_risk", "qi_total",
+            "top_records", "histogram"):
+    assert km[key] == kh[key], key
+am, ah = svc.anonymize_plan(tau=2, kmax=3), ref.anonymize_plan(tau=2, kmax=3)
+assert am["verified"] and ah["verified"]
+assert am["cells_suppressed"] == ah["cells_suppressed"]
+assert am["generalized_columns"] == ah["generalized_columns"]
 
 svc.close(); ref.close()
 print("MESH_SERVICE_OK")

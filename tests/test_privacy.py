@@ -1,0 +1,442 @@
+"""Privacy risk engine: coverage kernels, record-risk profiles, planner.
+
+Contracts under test:
+
+* the coverage accumulator is **bit-identical** across every engine and
+  placement (numpy ground truth vs jnp vs Pallas-interpret vs host/device
+  placements; the 8-device mesh parity runs in the subprocess test below
+  and in tests/test_mesh_service.py) — fixed-seed spot checks here, the
+  hypothesis sweep in tests/test_privacy_prop.py;
+* per-record risk numbers agree with a brute-force Python recomputation;
+* the old ``sdc.quasi`` loop answers are reproduced exactly by the
+  coverage-engine wrappers;
+* ``plan_anonymization`` always converges: apply the plan, re-mine the
+  masked table, get **zero** residual quasi-identifiers;
+* the service/HTTP surface: /risk and /anonymize payloads, the privacy LRU,
+  and the new /stats sections.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import KyivConfig, mine
+from repro.core.items import bits_to_rows, itemize
+from repro.core.placement import DevicePlacement, HostPlacement
+from repro.kernels.coverage import (
+    CoverageEngine,
+    acc_to_record_counts,
+    coverage_accumulate_host,
+    coverage_accumulate_indexed,
+    coverage_accumulate_ref,
+)
+from repro.privacy import (
+    GENERALIZED,
+    MASKED,
+    apply_plan,
+    mine_masked,
+    plan_anonymization,
+    risk_profile,
+    strip_masked_items,
+)
+from repro.privacy.risk import risk_scores
+from repro.sdc.quasi import QuasiIdentifierReport, find_quasi_identifiers, report_as_dict
+from repro.service import MiningService
+
+PLACEMENTS = [
+    HostPlacement(),
+    DevicePlacement("jnp"),
+    DevicePlacement("pallas", interpret=True),
+]
+
+
+def _rand(seed, n, m, dom):
+    return np.random.default_rng(seed).integers(0, dom, size=(n, m))
+
+
+def _brute_record_counts(bits, sets, weights, n_rows):
+    """Scalar per-record recomputation of the coverage contract."""
+    out = np.zeros(n_rows, dtype=np.int64)
+    for s in range(sets.shape[0]):
+        mask = bits[sets[s, 0]].copy()
+        for t in range(1, sets.shape[1]):
+            mask &= bits[sets[s, t]]
+        for r in range(n_rows):
+            if (int(mask[r // 32]) >> (r % 32)) & 1:
+                out[r] += int(weights[s])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Coverage kernel: engines bit-identical to the numpy ground truth
+# (fixed-seed spot checks; the hypothesis sweep lives in test_privacy_prop.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "seed,t,n_words,m,k",
+    [(0, 7, 1, 9, 1), (1, 24, 4, 40, 3), (2, 12, 8, 17, 4), (3, 2, 2, 1, 2)],
+)
+def test_coverage_accumulate_engines_bit_identical(seed, t, n_words, m, k):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2**32, size=(t, n_words), dtype=np.uint32)
+    sets = rng.integers(0, t, size=(m, k)).astype(np.int32)
+    weights = rng.integers(0, 3, size=m).astype(np.int32)  # 0-weights = padding
+
+    host = coverage_accumulate_host(bits, sets, weights)
+    ref = np.asarray(
+        coverage_accumulate_ref(jnp.asarray(bits), jnp.asarray(sets), jnp.asarray(weights))
+    )
+    pallas = np.asarray(
+        coverage_accumulate_indexed(
+            jnp.asarray(bits), jnp.asarray(sets), jnp.asarray(weights),
+            block_words=n_words, interpret=True,
+        )
+    )
+    assert np.array_equal(ref, host)
+    assert np.array_equal(pallas, host)
+    n_rows = n_words * 32
+    assert np.array_equal(
+        acc_to_record_counts(host, n_rows),
+        _brute_record_counts(bits, sets, weights, n_rows),
+    )
+
+
+@pytest.mark.parametrize("seed,n,m,dom,tau", [(5, 33, 3, 4, 1), (6, 80, 5, 6, 2)])
+def test_coverage_engine_placements_bit_identical(seed, n, m, dom, tau):
+    """The full engine path (width padding, batching, bucket padding with
+    weight-0 rows) agrees across placements on real mined itemsets."""
+    D = _rand(seed, n, m, dom)
+    res = mine(D, KyivConfig(tau=tau, kmax=3))
+    if not res.itemsets:
+        pytest.skip("no QIs mined for this configuration")
+    table = res.prep.table
+    sets = np.asarray(
+        [list(ids) + [ids[-1]] * (3 - len(ids)) for ids, _ in res.itemsets],
+        dtype=np.int32,
+    )
+    ref = None
+    for placement in PLACEMENTS:
+        eng = CoverageEngine(
+            table.bits, placement=placement, set_width=3, max_batch_sets=16
+        )
+        acc = eng.accumulate(sets)
+        if ref is None:
+            ref = acc
+        assert np.array_equal(acc, ref), placement.kind
+
+
+# ---------------------------------------------------------------------------
+# Risk profile semantics
+# ---------------------------------------------------------------------------
+
+
+def test_risk_scores_formula():
+    counts = np.array([[1, 0, 0, 0], [0, 1, 0, 2], [0, 0, 1, 0]])
+    risk = risk_scores(counts)
+    assert risk[0] == 1.0  # singleton QI pins the record
+    assert risk[1] == pytest.approx(0.5)  # one size-2 QI
+    assert risk[2] == pytest.approx(1 / 3)  # one size-3 QI
+    assert risk[3] == pytest.approx(1 - 0.25)  # two size-2 QIs
+    assert np.array_equal(risk == 0.0, counts.sum(0) == 0)
+
+
+@pytest.mark.parametrize("placement", PLACEMENTS, ids=lambda p: repr(p))
+def test_risk_profile_matches_brute_force(placement):
+    D = _rand(11, 60, 4, 5)
+    res = mine(D, KyivConfig(tau=1, kmax=3))
+    prof = risk_profile(res, placement=placement)
+    table = res.prep.table
+
+    qi_count = np.zeros(60, dtype=np.int64)
+    min_size = np.full(60, 99, dtype=np.int64)
+    for ids, _ in res.itemsets:
+        mask = table.bits[ids[0]].copy()
+        for i in ids[1:]:
+            mask &= table.bits[i]
+        rows = bits_to_rows(mask)
+        qi_count[rows] += 1
+        min_size[rows] = np.minimum(min_size[rows], len(ids))
+    min_size[qi_count == 0] = 0
+
+    assert np.array_equal(prof.qi_count, qi_count)
+    assert np.array_equal(prof.min_qi_size, min_size)
+    assert prof.records_at_risk == int((qi_count > 0).sum())
+    top = prof.top_records(5)
+    assert all(top[i]["risk"] >= top[i + 1]["risk"] for i in range(len(top) - 1))
+    hist = prof.histogram()
+    assert sum(hist["counts"]) == 60
+
+
+def test_risk_profile_empty_result():
+    D = np.tile(np.array([[1, 2], [1, 2]]), (5, 1))  # every item frequent
+    res = mine(D, KyivConfig(tau=1, kmax=2))
+    prof = risk_profile(res)
+    assert prof.records_at_risk == 0
+    assert prof.risk.max(initial=0.0) == 0.0
+    assert prof.top_records() == []
+
+
+# ---------------------------------------------------------------------------
+# sdc.quasi wrappers reproduce the legacy loop answers
+# ---------------------------------------------------------------------------
+
+
+def _legacy_unique_records(result):
+    table = result.prep.table
+    hit = np.zeros(table.n_rows, dtype=bool)
+    for ids, _ in result.itemsets:
+        m = table.bits[ids[0]].copy()
+        for i in ids[1:]:
+            m &= table.bits[i]
+        hit[bits_to_rows(m)] = True
+    return int(hit.sum())
+
+
+def _legacy_risky_columns(result):
+    table = result.prep.table
+    out = {}
+    for ids, _ in result.itemsets:
+        for i in ids:
+            c = int(table.col[i])
+            out[c] = out.get(c, 0) + 1
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_quasi_wrappers_match_legacy_loops(seed):
+    report = find_quasi_identifiers(_rand(seed, 70, 4, 5), tau=1, kmax=3)
+    assert report.unique_records() == _legacy_unique_records(report.result)
+    assert report.risky_columns() == _legacy_risky_columns(report.result)
+
+
+def test_report_as_dict_gains_risk_fields():
+    report = find_quasi_identifiers(_rand(3, 50, 4, 4), tau=1, kmax=3)
+    d = report_as_dict(report)
+    assert {"top_risk_records", "risk_histogram"} <= set(d)
+    assert sum(d["risk_histogram"]["counts"]) == 50
+    if d["top_risk_records"]:
+        r0 = d["top_risk_records"][0]
+        assert {"row", "risk", "qi_count", "min_qi_size"} <= set(r0)
+    json.dumps(d)  # JSON-serialisable end to end
+
+
+# ---------------------------------------------------------------------------
+# Anonymization planner: verified zero-residual plans
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "seed,n,m,dom,tau,kmax",
+    [
+        (0, 60, 4, 5, 1, 3),
+        (1, 120, 5, 6, 1, 3),
+        (2, 80, 4, 4, 2, 3),
+        (3, 40, 3, 8, 1, 2),  # wide domain: many singleton QIs
+    ],
+)
+def test_planner_zero_residual_qis(seed, n, m, dom, tau, kmax):
+    D = _rand(seed, n, m, dom)
+    plan = plan_anonymization(D, tau=tau, kmax=kmax)
+    assert plan.verified and plan.residual_qis == 0
+    masked = apply_plan(D, plan)
+    post = mine_masked(masked, KyivConfig(tau=tau, kmax=kmax))
+    assert post is None or len(post.itemsets) == 0
+    # the plan actually edited something iff there were QIs to kill
+    had_qis = plan.initial_qis > 0
+    assert had_qis == bool(plan.suppressions or plan.generalized_columns)
+
+
+def test_planner_noop_on_safe_table():
+    D = np.tile(np.array([[1, 5], [2, 6]]), (10, 1))  # all supports = 10 > tau
+    plan = plan_anonymization(D, tau=1, kmax=2)
+    assert plan.verified and plan.initial_qis == 0
+    assert plan.suppressions == [] and plan.generalized_columns == []
+    assert np.array_equal(apply_plan(D, plan), D)
+
+
+def test_planner_degenerate_tiny_table():
+    D = np.array([[1, 2, 3]])  # n_rows <= tau: only full suppression works
+    plan = plan_anonymization(D, tau=1, kmax=2)
+    assert plan.verified
+    assert sorted(plan.suppressions) == [(0, 0), (0, 1), (0, 2)]
+    assert mine_masked(apply_plan(D, plan), KyivConfig(tau=1, kmax=2)) is None
+
+
+def test_planner_rejects_sentinel_values():
+    with pytest.raises(ValueError, match="sentinel"):
+        plan_anonymization(np.array([[MASKED, 1]]), tau=1)
+
+
+def test_planner_empty_shapes():
+    for shape in ((0, 3), (5, 0)):
+        plan = plan_anonymization(np.empty(shape, dtype=np.int64), tau=1)
+        assert plan.verified and plan.suppressions == []
+
+
+def test_strip_masked_items_and_generalized_are_frequent():
+    D = _rand(5, 30, 3, 4)
+    masked = D.copy().astype(np.int64)
+    masked[0, 0] = MASKED
+    masked[:, 2] = GENERALIZED
+    table = strip_masked_items(itemize(masked))
+    assert not (table.value == MASKED).any()
+    gen_items = np.nonzero(table.value == GENERALIZED)[0]
+    assert len(gen_items) == 1 and table.freq[gen_items[0]] == 30
+
+
+def test_apply_plan_matches_planner_final_state():
+    D = _rand(9, 50, 4, 5)
+    plan = plan_anonymization(D, tau=1, kmax=3)
+    masked = apply_plan(D, plan)
+    for r, c in plan.suppressions:
+        assert masked[r, c] in (MASKED, GENERALIZED)
+    for c in plan.generalized_columns:
+        assert (masked[:, c] == GENERALIZED).all()
+    untouched = np.ones_like(D, dtype=bool)
+    if plan.suppressions:
+        rows, cols = zip(*plan.suppressions)
+        untouched[list(rows), list(cols)] = False
+    untouched[:, plan.generalized_columns] = False
+    assert np.array_equal(masked[untouched], D.astype(np.int64)[untouched])
+
+
+# ---------------------------------------------------------------------------
+# Service + HTTP surface
+# ---------------------------------------------------------------------------
+
+
+def test_service_risk_and_plan_cached_per_version():
+    svc = MiningService.from_dataset(_rand(13, 90, 4, 5))
+    r1 = svc.risk(tau=1, kmax=3)
+    r2 = svc.risk(tau=1, kmax=3)
+    assert r1["source"] in ("cold", "incremental") and r2["source"] == "privacy-cache"
+    assert r1["records_at_risk"] == r2["records_at_risk"]
+
+    p1 = svc.anonymize_plan(tau=1, kmax=3)
+    assert p1["verified"] and p1["residual_qis"] == 0
+    assert svc.anonymize_plan(tau=1, kmax=3)["source"] == "privacy-cache"
+
+    svc.append(_rand(14, 10, 4, 5))
+    r3 = svc.risk(tau=1, kmax=3)
+    assert r3["source"] != "privacy-cache" and r3["version"] == r1["version"] + 1
+
+    stats = svc.stats()
+    assert stats["privacy"]["hits"] >= 2
+    assert "coverage_executables" in stats
+    svc.close()
+
+
+def test_service_plan_agrees_with_direct_planner():
+    """The store's reconstructed dataset must round-trip: planning on it
+    equals planning on the original rows."""
+    D = _rand(21, 70, 4, 5)
+    svc = MiningService.from_dataset(D)
+    assert np.array_equal(svc.store.item_table().to_dataset(), D)
+    p = svc.anonymize_plan(tau=1, kmax=3)
+    direct = plan_anonymization(D, tau=1, kmax=3)
+    assert p["cells_suppressed"] == direct.cells_suppressed
+    assert p["generalized_columns"] == [int(c) for c in direct.generalized_columns]
+    svc.close()
+
+
+@pytest.fixture()
+def http_service():
+    from repro.launch.serve_miner import make_server
+
+    svc = MiningService.from_dataset(_rand(0, 150, 4, 5))
+    server = make_server(svc, port=0)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    yield svc, server.server_address[1]
+    server.shutdown()
+    server.server_close()
+    svc.close()
+
+
+def _req(port, path):
+    resp = urllib.request.urlopen(f"http://127.0.0.1:{port}{path}", timeout=30)
+    return resp.status, json.loads(resp.read())
+
+
+def test_http_risk_and_anonymize_endpoints(http_service):
+    _, port = http_service
+    code, risk = _req(port, "/risk?tau=1&kmax=3&top=3")
+    assert code == 200 and risk["n_rows"] == 150
+    assert len(risk["top_records"]) <= 3
+    assert sum(risk["histogram"]["counts"]) == 150
+
+    code, risk2 = _req(port, "/risk?tau=1&kmax=3&top=3")
+    assert risk2["source"] == "privacy-cache"
+
+    code, plan = _req(port, "/anonymize?tau=1&kmax=3")
+    assert code == 200 and plan["verified"] and plan["residual_qis"] == 0
+
+    code, rep = _req(port, "/report?tau=1&kmax=3")
+    assert rep["unique_records"] == risk["records_at_risk"]
+
+    code, stats = _req(port, "/stats")
+    assert stats["privacy"]["entries"] >= 2
+    assert "coverage_executables" in stats
+
+
+# ---------------------------------------------------------------------------
+# 8-device mesh parity (subprocess — XLA device count must pre-date jax init)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+import jax
+from repro.core import KyivConfig, MeshPlacement, mine
+from repro.core.placement import HostPlacement
+from repro.kernels.coverage import CoverageEngine, coverage_cache_stats
+from repro.privacy import risk_profile
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+placement = MeshPlacement(mesh, pair_axes=("data",), word_axis="model")
+rng = np.random.default_rng(31)
+bits = rng.integers(0, 2**32, size=(41, 10), dtype=np.uint32)  # W % shards != 0
+sets = rng.integers(0, 41, size=(53, 3)).astype(np.int32)
+wt = rng.integers(0, 2, size=53).astype(np.int32)
+
+host = CoverageEngine(bits, placement=HostPlacement(), set_width=3).accumulate(sets, wt)
+mesh_acc = CoverageEngine(bits, placement=placement, set_width=3).accumulate(sets, wt)
+assert np.array_equal(mesh_acc, host), "mesh coverage accumulator != host"
+assert coverage_cache_stats()["entries"] >= 1
+
+D = rng.integers(0, 5, size=(210, 5))
+res_mesh = mine(D, KyivConfig(tau=2, kmax=3, placement=placement))
+res_host = mine(D, KyivConfig(tau=2, kmax=3))
+pm = risk_profile(res_mesh)          # placement resolved from the config
+ph = risk_profile(res_host)
+assert np.array_equal(pm.counts_by_size, ph.counts_by_size)
+assert np.array_equal(pm.qi_count, ph.qi_count)
+assert np.array_equal(pm.min_qi_size, ph.min_qi_size)
+assert np.allclose(pm.risk, ph.risk)
+print("MESH_COVERAGE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_mesh_coverage_bit_identical_8dev():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT, src],
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "MESH_COVERAGE_OK" in proc.stdout

@@ -1,0 +1,125 @@
+"""Property tests (hypothesis) for the privacy coverage engine.
+
+The coverage accumulator must be **bit-identical** across the numpy ground
+truth, the jnp oracle, the Pallas-interpret kernel and every placement's
+full engine path (width padding by repetition, batching, bucket padding
+with weight-0 rows) — and the per-record conversion must match a scalar
+brute-force recomputation. The planner's zero-residual invariant is also
+swept here over random tables. Deterministic spot checks and the service /
+HTTP / mesh coverage live in tests/test_privacy.py.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import KyivConfig, mine
+from repro.core.placement import DevicePlacement, HostPlacement
+from repro.kernels.coverage import (
+    CoverageEngine,
+    acc_to_record_counts,
+    coverage_accumulate_host,
+    coverage_accumulate_indexed,
+    coverage_accumulate_ref,
+)
+from repro.privacy import apply_plan, mine_masked, plan_anonymization
+
+PLACEMENTS = [
+    HostPlacement(),
+    DevicePlacement("jnp"),
+    DevicePlacement("pallas", interpret=True),
+]
+
+
+def _brute_record_counts(bits, sets, weights, n_rows):
+    out = np.zeros(n_rows, dtype=np.int64)
+    for s in range(sets.shape[0]):
+        mask = bits[sets[s, 0]].copy()
+        for t in range(1, sets.shape[1]):
+            mask &= bits[sets[s, t]]
+        for r in range(n_rows):
+            if (int(mask[r // 32]) >> (r % 32)) & 1:
+                out[r] += int(weights[s])
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    t=st.integers(2, 24),
+    n_words=st.sampled_from([1, 2, 4, 8]),
+    m=st.integers(1, 40),
+    k=st.integers(1, 4),
+)
+def test_coverage_accumulate_engines_bit_identical(seed, t, n_words, m, k):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2**32, size=(t, n_words), dtype=np.uint32)
+    sets = rng.integers(0, t, size=(m, k)).astype(np.int32)
+    weights = rng.integers(0, 3, size=m).astype(np.int32)
+
+    host = coverage_accumulate_host(bits, sets, weights)
+    ref = np.asarray(
+        coverage_accumulate_ref(
+            jnp.asarray(bits), jnp.asarray(sets), jnp.asarray(weights)
+        )
+    )
+    pallas = np.asarray(
+        coverage_accumulate_indexed(
+            jnp.asarray(bits), jnp.asarray(sets), jnp.asarray(weights),
+            block_words=n_words, interpret=True,
+        )
+    )
+    assert np.array_equal(ref, host)
+    assert np.array_equal(pallas, host)
+    n_rows = n_words * 32
+    assert np.array_equal(
+        acc_to_record_counts(host, n_rows),
+        _brute_record_counts(bits, sets, weights, n_rows),
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    n=st.integers(5, 80),
+    m=st.integers(2, 5),
+    dom=st.integers(2, 6),
+    tau=st.integers(1, 2),
+)
+def test_coverage_engine_placements_bit_identical(seed, n, m, dom, tau):
+    D = np.random.default_rng(seed).integers(0, dom, size=(n, m))
+    res = mine(D, KyivConfig(tau=tau, kmax=3))
+    if not res.itemsets:
+        return
+    table = res.prep.table
+    sets = np.asarray(
+        [list(ids) + [ids[-1]] * (3 - len(ids)) for ids, _ in res.itemsets],
+        dtype=np.int32,
+    )
+    ref = None
+    for placement in PLACEMENTS:
+        eng = CoverageEngine(
+            table.bits, placement=placement, set_width=3, max_batch_sets=16
+        )
+        acc = eng.accumulate(sets)
+        if ref is None:
+            ref = acc
+        assert np.array_equal(acc, ref), placement.kind
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    n=st.integers(2, 60),
+    m=st.integers(2, 4),
+    dom=st.integers(2, 7),
+    tau=st.integers(1, 2),
+)
+def test_planner_always_verifies_zero_residual(seed, n, m, dom, tau):
+    D = np.random.default_rng(seed).integers(0, dom, size=(n, m))
+    plan = plan_anonymization(D, tau=tau, kmax=3)
+    assert plan.verified and plan.residual_qis == 0
+    post = mine_masked(apply_plan(D, plan), KyivConfig(tau=tau, kmax=3))
+    assert post is None or len(post.itemsets) == 0
