@@ -50,6 +50,10 @@ def _mine_once(D, engine: str, fused: bool, kmax: int, tau: int) -> dict:
             engine=engine,
             fused_classify=fused,
             interpret=True,
+            # pin the host candidate path so this bench keeps isolating
+            # classification fusion (device frontier vs host candidate gen
+            # is benchmarks/bench_frontier.py's comparison)
+            device_frontier=False,
         ),
     )
     return {
@@ -58,7 +62,11 @@ def _mine_once(D, engine: str, fused: bool, kmax: int, tau: int) -> dict:
         "wall_time": res.wall_time,
         "time_intersect": res.total_intersect_time,
         "time_classify": res.total_classify_time,
+        "time_candidates": res.total_candidate_time,
         "per_level_classify": [s.time_classify for s in res.stats],
+        # per-level host-busy vs device-busy split (candidate gen + support
+        # + classify vs dispatch + sync) — the frontier win at --full scale
+        "per_level_timing": res.timing_breakdown(),
         "intersections": res.total_intersections,
         "n_results": len(res.itemsets),
     }

@@ -2,6 +2,7 @@
 τ-infrequent itemset miner (Demchuk & Leith 2014), in bitset/TPU form, plus
 the MINIT baseline and a brute-force oracle."""
 
+from . import exec_cache
 from .items import ItemTable, itemize, pack_rows_to_bits, bits_popcount, bits_to_rows
 from .placement import (
     BitsetPlacement,
@@ -12,9 +13,17 @@ from .placement import (
     resolve_placement,
 )
 from .preprocess import Preprocessed, preprocess, ORDERINGS
-from .prefix import Level, CandidateBatch, generate_candidates, prefix_group_sizes
+from .prefix import (
+    Level,
+    CandidateBatch,
+    generate_candidates,
+    group_reps,
+    iter_group_spans,
+    prefix_group_sizes,
+)
 from .support import ItemsetIndex, support_test
 from .bounds import lemma_bound, corollary_bound, apply_bounds
+from .frontier import LevelFrontier, mine_levels
 from .kyiv import (
     KyivConfig,
     LevelStats,
@@ -28,6 +37,7 @@ from .oracle import brute_force_minimal_infrequent
 from .minit import minit_minimal_infrequent
 
 __all__ = [
+    "exec_cache",
     "ItemTable",
     "itemize",
     "pack_rows_to_bits",
@@ -45,7 +55,11 @@ __all__ = [
     "Level",
     "CandidateBatch",
     "generate_candidates",
+    "group_reps",
+    "iter_group_spans",
     "prefix_group_sizes",
+    "LevelFrontier",
+    "mine_levels",
     "ItemsetIndex",
     "support_test",
     "lemma_bound",

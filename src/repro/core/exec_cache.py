@@ -1,0 +1,158 @@
+"""One process-wide executable cache, namespaced per kernel family.
+
+Until PR 5 every kernel family kept its own ``ExecutableCache`` instance
+(``kernels.intersect.ops.EXEC_CACHE`` and ``kernels.coverage.ops.EXEC_CACHE``),
+which meant two hit/miss surfaces in ``/stats`` and a third was about to
+appear for the frontier ops. This module is the single shared registry:
+
+* :class:`SharedExecutableCache` holds one ``(family, key) -> callable`` map
+  with per-family hit/miss/entry counters behind one lock;
+* :meth:`SharedExecutableCache.family` hands out a :class:`FamilyCache` view
+  whose ``get``/``stats``/``clear`` API is exactly what the old per-family
+  instances exposed, so every existing call site keeps working;
+* :func:`stats` is the one observability surface — per-family counters plus
+  process totals — reported as the single ``executables`` section of the
+  service's ``/stats``.
+
+Import discipline: this module is a **leaf** (stdlib only). The kernels
+packages import it, and ``repro.core`` re-exports it — kernels must never
+import anything else from ``repro.core`` (core imports kernels, and the
+reverse edge would cycle). ``kernels/*/ops.py`` therefore bind their family
+views where their module bodies no longer need anything from core's
+``__init__`` to have finished executing (see the note at the bottom of
+``kernels/intersect/ops.py``).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+__all__ = [
+    "ExecutableCache",
+    "FamilyCache",
+    "SharedExecutableCache",
+    "SHARED_EXEC_CACHE",
+    "exec_family",
+    "stats",
+    "reset",
+]
+
+
+class SharedExecutableCache:
+    """Process-wide cache of bound batch-dispatch callables, keyed by
+    ``(family, key)``.
+
+    One entry per executable bucket — ``jax.jit`` already memoises compiled
+    executables by shape, but the dispatch-branch selection, tile arithmetic
+    and kernel-variant binding would otherwise be redone on every pipeline
+    dispatch of every ``mine()`` call. Hoisting them here makes the bucket
+    set shared across pipelines, levels, mining requests and kernel families
+    (the resident service's warm start), and makes warm-vs-cold observable
+    via per-family hit/miss counters.
+    """
+
+    def __init__(self):
+        self._fns: dict[tuple, Any] = {}
+        self._lock = threading.Lock()
+        self._hits: dict[str, int] = {}
+        self._misses: dict[str, int] = {}
+
+    def get(self, family: str, key: tuple, builder: Callable[[], Any]):
+        full = (family, key)
+        with self._lock:
+            fn = self._fns.get(full)
+            if fn is not None:
+                self._hits[family] = self._hits.get(family, 0) + 1
+                return fn
+            self._misses[family] = self._misses.get(family, 0) + 1
+        fn = builder()
+        with self._lock:
+            # a racing builder may have beaten us; keep the first binding so
+            # every caller shares one executable bucket
+            fn = self._fns.setdefault(full, fn)
+        return fn
+
+    def family(self, name: str) -> "FamilyCache":
+        return FamilyCache(self, name)
+
+    def family_stats(self, name: str) -> dict:
+        with self._lock:
+            entries = sum(1 for fam, _ in self._fns if fam == name)
+            return {
+                "entries": entries,
+                "hits": self._hits.get(name, 0),
+                "misses": self._misses.get(name, 0),
+            }
+
+    def stats(self) -> dict:
+        """Per-family counters plus totals — the ``/stats`` payload."""
+        with self._lock:
+            families: dict[str, dict] = {}
+            for fam, _ in self._fns:
+                families.setdefault(fam, {"entries": 0})["entries"] += 1
+            for fam in set(self._hits) | set(self._misses) | set(families):
+                entry = families.setdefault(fam, {"entries": 0})
+                entry["hits"] = self._hits.get(fam, 0)
+                entry["misses"] = self._misses.get(fam, 0)
+            return {
+                "families": families,
+                "entries": len(self._fns),
+                "hits": sum(self._hits.values()),
+                "misses": sum(self._misses.values()),
+            }
+
+    def clear(self, family: str | None = None) -> None:
+        with self._lock:
+            if family is None:
+                self._fns.clear()
+                self._hits.clear()
+                self._misses.clear()
+                return
+            for full in [k for k in self._fns if k[0] == family]:
+                del self._fns[full]
+            self._hits.pop(family, None)
+            self._misses.pop(family, None)
+
+
+class FamilyCache:
+    """One family's view of the shared cache — the drop-in replacement for
+    the old per-module ``ExecutableCache`` instances (same ``get(key,
+    builder)`` / ``stats()`` / ``clear()`` API and stats keys)."""
+
+    def __init__(self, shared: SharedExecutableCache, name: str):
+        self._shared = shared
+        self.name = name
+
+    def get(self, key: tuple, builder: Callable[[], Any]):
+        return self._shared.get(self.name, key, builder)
+
+    def stats(self) -> dict:
+        return self._shared.family_stats(self.name)
+
+    def clear(self) -> None:
+        self._shared.clear(self.name)
+
+    def __repr__(self) -> str:
+        return f"FamilyCache({self.name!r})"
+
+
+# Backwards-compatible alias: ``kernels.intersect.ExecutableCache`` used to
+# name the standalone per-module class; family views are what replaced it.
+ExecutableCache = FamilyCache
+
+SHARED_EXEC_CACHE = SharedExecutableCache()
+
+
+def exec_family(name: str) -> FamilyCache:
+    """The named family view of the process-wide executable cache."""
+    return SHARED_EXEC_CACHE.family(name)
+
+
+def stats() -> dict:
+    """Single observability surface over every kernel family's executables."""
+    return SHARED_EXEC_CACHE.stats()
+
+
+def reset(family: str | None = None) -> None:
+    SHARED_EXEC_CACHE.clear(family)

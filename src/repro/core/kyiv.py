@@ -1,60 +1,64 @@
 """The Kyiv algorithm (paper Algorithm 1): breadth-first minimal τ-infrequent
-itemset mining.
+itemset mining, driven over a device-resident level frontier.
 
-Per level-transition (k -> k+1):
+Per level-transition (k -> k+1), all five steps of Alg. 1 lines 11-41 run
+where the placement keeps the level (``repro.core.frontier``):
+
   1. candidate joins of prefix-sharing stored itemsets     (lines 11-20)
   2. support-itemset test via stored-level lookups         (line 23, §4.4.1)
   3. at k+1 == k_max: Lemma 4.6 + Corollary 4.7 bounds     (lines 25-29)
   4. bulk row intersection (the bottleneck, Pallas kernel) (line 31)
-  5. classify: absent/uniform skip (line 32), emit minimal τ-infrequent
-     (lines 34-38 incl. Prop 4.1 mirror expansion), or store (line 41)
+  5. classify + partition: absent/uniform skip (line 32), emit minimal
+     τ-infrequent (lines 34-38 incl. Prop 4.1 mirror expansion), or store
+     (line 41)
+
+**What lives where.** With a device or mesh placement and the default
+``KyivConfig.device_frontier`` / ``fused_classify``, a level transition is
+device-to-device: candidate pair indices come from prefix-group run lengths
+(``cumsum``/``searchsorted``), the support test binary-searches a packed
+parent key table, the fused kernels classify in VMEM, and one stable
+compaction pass splits each batch into [skip | emit | store] — stored child
+bitsets never visit the host; the next level is a device-side concat. The
+host keeps only the tiny frontier mirrors (itemset ids, counts, group run
+lengths) and drains the emitted minimal itemsets. The only host sync points
+are three scalars plus the emit/store index blocks per batch, the
+``k = k_max`` bound pruning (``use_bounds``), and ``on_level_end``
+checkpoint hooks (which materialise level bitsets into ``MiningState``).
+With ``HostPlacement`` (``engine="numpy"``), a legacy ``intersect_fn``, or
+``fused_classify=False``, the same engine runs the numpy reference path —
+bit-identical on results and per-level stats by construction, and kept as
+the parity oracle and benchmark baseline.
 
 Vertex bookkeeping follows §5.2.3: type **A** = emitted minimal τ-infrequent,
 type **B** = visited without performing a row intersection (support- or
 bound-pruned), type **C** = the rest (intersection performed).
 
-The driver is host-orchestrated (level control flow) with device-bulk
-intersections — the same split the paper uses (Java control, hot loop on
-rows), adapted so the hot loop is a TPU kernel.
-
-**Fused classify contract** (``KyivConfig.fused_classify``, default on):
-steps 4 and 5 run as *one* device pass. Each level builds a
-``repro.kernels.intersect.LevelPipeline`` that holds the parent bitsets and
-popcounts device-resident; every candidate batch is dispatched
-asynchronously and returns ``(child, counts, classes)`` where ``classes`` is
-the per-pair code CLASS_SKIP / CLASS_EMIT / CLASS_STORE computed in VMEM
-(Alg. 1 lines 32-41) by the fused kernels. Host code then only gathers the
-emitted rows (``classes == CLASS_EMIT``) and concatenates stored children
-(``classes == CLASS_STORE``) — it never re-derives the masks from counts.
 Batches are double-buffered: candidate generation, support tests and bound
-pruning of batch *n+1* overlap the device intersection of batch *n*; the
-only synchronisation point is ``BatchHandle.result()`` on the previous
-batch. With ``fused_classify=False`` the driver falls back to host
-classification (the pre-fusion path, kept as the benchmark baseline); both
-paths are bit-identical on results and stats (see tests/test_fused_classify.py).
+pruning of batch *n+1* overlap the device intersection of batch *n*. Parent
+levels retire eagerly once a transition completes (placement-owned device
+buffers are deleted), so peak device memory tracks
+``MiningResult.peak_level_bytes`` rather than every level mined so far.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import time
 from typing import Any, Callable
 
 import numpy as np
 
-from ..kernels.intersect import (
-    CLASS_EMIT,
-    CLASS_STORE,
-    LegacyIntersectPipeline,
-    LevelPipeline,
-)
+# Submodule imports (not the package __init__): the shared executable cache
+# in ``core/exec_cache.py`` means ``kernels.intersect.ops`` re-enters
+# ``repro.core`` at its bottom line; importing through the half-initialised
+# kernels package namespace would cycle, the submodules are always loaded.
+from ..kernels.intersect.ops import LegacyIntersectPipeline, LevelPipeline
+from .frontier import LevelFrontier, expand_mirrors, mine_levels
 from .items import ItemTable, itemize
 from .placement import resolve_placement
 from .preprocess import Preprocessed, preprocess
-from .prefix import CandidateBatch, Level, iter_candidate_batches
-from .support import ItemsetIndex, support_test
-from .bounds import apply_bounds
+from .prefix import Level
+from .support import ItemsetIndex
 
 __all__ = [
     "KyivConfig",
@@ -65,6 +69,9 @@ __all__ = [
     "mine_preprocessed",
     "prepare",
 ]
+
+# kept where it always lived; the implementation moved to core.frontier
+_expand_mirrors = expand_mirrors
 
 
 @dataclasses.dataclass
@@ -87,6 +94,10 @@ class KyivConfig:
     fused_classify: bool = True  # classify (Alg. 1 lines 32-41) on the engine
     locality_sort: bool = True  # locality-aware pair schedule before dispatch
     double_buffer: bool = True  # overlap host candidate gen with device batches
+    # run candidate generation, support tests and emit/store partitioning on
+    # the placement's device (core.frontier); False pins the host reference
+    # path even for device placements — the bench_frontier baseline
+    device_frontier: bool = True
 
 
 @dataclasses.dataclass
@@ -101,7 +112,8 @@ class LevelStats:
     stored: int = 0
     time_total: float = 0.0
     time_intersect: float = 0.0  # dispatch + blocking device sync
-    time_classify: float = 0.0  # host-side classification consumption
+    time_classify: float = 0.0  # classification / partition consumption
+    time_candidates: float = 0.0  # candidate gen + support test + bounds
     level_bytes: int = 0
 
     @property
@@ -115,6 +127,33 @@ class LevelStats:
     @property
     def type_c(self) -> int:
         return self.intersections - self.emitted
+
+    @property
+    def time_host_busy(self) -> float:
+        """Host-side frontier work (candidate gen / support / bounds on the
+        host path; batch orchestration + emit drain on the device path)."""
+        return self.time_candidates + self.time_classify
+
+    @property
+    def time_device_busy(self) -> float:
+        """Time attributed to device dispatch + blocking sync."""
+        return self.time_intersect
+
+    def timing_breakdown(self) -> dict:
+        """JSON-friendly per-level host-idle vs device-busy split (served in
+        ``/stats`` and recorded by the benchmarks)."""
+        return {
+            "k": self.k,
+            "total": self.time_total,
+            "candidates": self.time_candidates,
+            "intersect": self.time_intersect,
+            "classify": self.time_classify,
+            "host_busy": self.time_host_busy,
+            "device_busy": self.time_device_busy,
+            "idle_other": max(
+                0.0, self.time_total - self.time_host_busy - self.time_device_busy
+            ),
+        }
 
 
 @dataclasses.dataclass
@@ -151,8 +190,15 @@ class MiningResult:
         return sum(s.time_classify for s in self.stats)
 
     @property
+    def total_candidate_time(self) -> float:
+        return sum(s.time_candidates for s in self.stats)
+
+    @property
     def peak_level_bytes(self) -> int:
         return max((s.level_bytes for s in self.stats), default=0)
+
+    def timing_breakdown(self) -> list[dict]:
+        return [s.timing_breakdown() for s in self.stats]
 
 
 @dataclasses.dataclass
@@ -164,7 +210,9 @@ class MiningState:
     Checkpoint managers and the resident mining service both hold one of
     these to restart (or warm-continue) a run without redoing earlier
     levels. Mapping-style access (``state["level"]``) is kept so existing
-    checkpoint hooks keep working.
+    checkpoint hooks keep working. ``level.bits`` is always materialised to
+    host numpy here (the one deliberate device->host sync of the frontier
+    path), so states stay picklable and resumable under any placement.
     """
 
     results: list[tuple[tuple[int, ...], int]]
@@ -195,47 +243,6 @@ class MiningState:
         )
 
 
-def _expand_mirrors(
-    itemset_ids: tuple[int, ...],
-    count: int,
-    mirror_of: dict[int, list[int]],
-    mode: str,
-) -> list[tuple[tuple[int, ...], int]]:
-    """Proposition 4.1 expansion of a canonical result over duplicate items.
-
-    ``mode="paper"`` reproduces Alg. 1 lines 36-38 exactly (one swap at a
-    time). ``mode="full"`` closes over all combinations of swaps — Prop. 4.1
-    applies inductively, so every member of the product is minimal
-    τ-infrequent; the brute-force oracle confirms the full closure is the
-    complete answer (see tests).
-    """
-    out = [(tuple(sorted(itemset_ids)), count)]
-    classes = [[i] + mirror_of.get(i, []) for i in itemset_ids]
-    if mode == "paper":
-        for pos, cls in enumerate(classes):
-            for repl in cls[1:]:
-                swapped = list(itemset_ids)
-                swapped[pos] = repl
-                out.append((tuple(sorted(swapped)), count))
-    else:  # full product closure
-        if any(len(c) > 1 for c in classes):
-            for combo in itertools.product(*classes):
-                out.append((tuple(sorted(combo)), count))
-    # dedupe, preserve order
-    seen: set[tuple[int, ...]] = set()
-    uniq = []
-    for ids, c in out:
-        if ids not in seen:
-            seen.add(ids)
-            uniq.append((ids, c))
-    return uniq
-
-
-def _chunks(total: int, size: int):
-    for s in range(0, total, size):
-        yield s, min(s + size, total)
-
-
 def mine_preprocessed(
     prep: Preprocessed,
     config: KyivConfig,
@@ -253,12 +260,11 @@ def mine_preprocessed(
     older injection contract, adapted with host-side classification.
     ``on_level_end`` receives a :class:`MiningState` at every level boundary
     (the checkpoint hook); ``resume_state`` (a ``MiningState`` or the
-    equivalent mapping from an old checkpoint) restarts there.
+    equivalent mapping from an old checkpoint) restarts there. The level
+    loop itself lives in :func:`repro.core.frontier.mine_levels`.
     """
     t_start = time.perf_counter()
     table = prep.table
-    tau, kmax = config.tau, config.kmax
-    n = table.n_rows
     if pipeline_factory is not None:
         make_pipeline = pipeline_factory
     elif intersect_fn is not None:
@@ -287,166 +293,44 @@ def mine_preprocessed(
     stats.append(s1)
 
     # level 1 of the prefix tree over L^< (line 8)
-    level = Level(
+    frontier = LevelFrontier(
         k=1,
         itemsets=np.arange(prep.n_l, dtype=np.int32)[:, None],
         counts=prep.l_freq.copy(),
         bits=prep.l_bits,
     )
     grandparent_index: ItemsetIndex | None = None
-    level_index = ItemsetIndex(level.itemsets, level.counts, n_symbols=prep.n_l)
-    k = 2
+    start_k = 2
 
     if resume_state is not None:
         st = MiningState.from_mapping(resume_state)
         results = list(st.results)
         stats = list(st.stats)
-        level = st.level
+        frontier = LevelFrontier.from_level(st.level)
         grandparent_index = st.grandparent_index
-        level_index = ItemsetIndex(level.itemsets, level.counts, n_symbols=prep.n_l)
-        k = st.next_k
+        start_k = st.next_k
 
-    while k <= kmax and level.t >= 2:
-        ls = LevelStats(k=k)
-        lt0 = time.perf_counter()
-        write_children = k < kmax
+    def make_state(next_k: int, fr: LevelFrontier, gp) -> MiningState:
+        return MiningState(
+            results=results,
+            stats=stats,
+            level=fr.as_level(host_bits=True),
+            grandparent_index=gp,
+            next_k=next_k,
+        )
 
-        # level streaming (paper §6.1): candidates are generated, tested and
-        # intersected in prefix-group batches bounded by a pair budget that
-        # also caps the intersection working set (child bitsets + gathered
-        # operands ≈ 3 * batch * W * 4 bytes). A whole level's join is never
-        # materialised at once — this is what lets the miner run the paper's
-        # million-row datasets in bounded host memory.
-        n_words = prep.l_bits.shape[1]
-        batch_cap = max(4096, (1 << 28) // max(n_words, 1))
-        batch_pairs = min(config.max_pairs_per_chunk, batch_cap)
-
-        new_itemsets, new_counts, new_bits = [], [], []
-        pipe = make_pipeline(level.bits, level.counts, tau)
-
-        def consume(entry):
-            """Block on a dispatched batch and consume its classified output."""
-            sel_itemsets, pairs, handle = entry
-            it0 = time.perf_counter()
-            child, counts, classes = handle.result()
-            ls.time_intersect += time.perf_counter() - it0
-
-            ct0 = time.perf_counter()
-            if classes is None:
-                # host classification (legacy intersect_fn / fused_classify=False)
-                ci = level.counts[pairs[:, 0]]
-                cj = level.counts[pairs[:, 1]]
-                minp = np.minimum(ci, cj)
-                absent_uniform = (counts == 0) | (counts == minp)
-                infrequent = (~absent_uniform) & (counts <= tau)
-                store = (~absent_uniform) & (~infrequent)
-                inf_rows = np.nonzero(infrequent)[0]
-                n_skipped = int(absent_uniform.sum())
-            else:
-                # fused path: the engine already classified every pair
-                inf_rows = np.nonzero(classes == CLASS_EMIT)[0]
-                store = classes == CLASS_STORE
-                n_skipped = len(classes) - len(inf_rows) - int(store.sum())
-            ls.time_classify += time.perf_counter() - ct0
-            ls.skipped_absent_uniform += n_skipped
-
-            if len(inf_rows):
-                # vectorised emission: one gather for all found itemsets;
-                # the per-item mirror expansion only runs for itemsets that
-                # actually touch a duplicate-rowset item (rare).
-                ids_mat = prep.l_items[sel_itemsets[inf_rows]]  # (r, k)
-                ids_mat = np.sort(ids_mat, axis=1)  # canonical ascending ids
-                cnts = counts[inf_rows]
-                if prep.mirror_of:
-                    mirror_items = np.fromiter(prep.mirror_of.keys(), dtype=np.int64)
-                    has_mirror = np.isin(ids_mat, mirror_items).any(axis=1)
-                else:
-                    has_mirror = np.zeros(len(inf_rows), dtype=bool)
-                plain = ~has_mirror
-                results.extend(
-                    zip(map(tuple, ids_mat[plain].tolist()), cnts[plain].tolist())
-                )
-                for r in np.nonzero(has_mirror)[0]:
-                    results.extend(
-                        _expand_mirrors(tuple(ids_mat[r].tolist()), int(cnts[r]),
-                                        prep.mirror_of, config.expansion)
-                    )
-                ls.emitted += len(inf_rows)
-
-            if write_children and store.any():
-                rows = np.nonzero(store)[0]
-                new_itemsets.append(sel_itemsets[rows])
-                new_counts.append(counts[rows])
-                new_bits.append(child[rows])
-
-        # double-buffered batch pipeline: batch n intersects on device while
-        # batch n+1 is generated, support-tested and bound-pruned on the host.
-        pending = None
-        for cand in iter_candidate_batches(level, batch_pairs):
-            ls.candidates += cand.m
-
-            ok = support_test(cand.itemsets, level_index)
-            ls.support_pruned += int((~ok).sum())
-
-            if k == kmax and config.use_bounds and ok.any():
-                alive_idx = np.nonzero(ok)[0]
-                sub = CandidateBatch(
-                    i_idx=cand.i_idx[alive_idx],
-                    j_idx=cand.j_idx[alive_idx],
-                    itemsets=cand.itemsets[alive_idx],
-                )
-                pruned = apply_bounds(sub, level, level_index, grandparent_index, n, tau)
-                ls.bound_pruned += int(pruned.sum())
-                ok[alive_idx[pruned]] = False
-
-            sel = np.nonzero(ok)[0]
-            ls.intersections += len(sel)
-            if len(sel) == 0:
-                continue
-            pairs = np.stack([cand.i_idx[sel], cand.j_idx[sel]], axis=1).astype(np.int32)
-            it0 = time.perf_counter()
-            handle = pipe.submit(pairs, write_children)  # async dispatch
-            ls.time_intersect += time.perf_counter() - it0
-            entry = (cand.itemsets[sel], pairs, handle)
-            if not config.double_buffer:
-                consume(entry)
-                continue
-            if pending is not None:
-                consume(pending)
-            pending = entry
-        if pending is not None:
-            consume(pending)
-
-        if write_children and new_itemsets:
-            nxt_itemsets = np.concatenate(new_itemsets, axis=0)
-            nxt_counts = np.concatenate(new_counts, axis=0)
-            nxt_bits = np.concatenate(new_bits, axis=0)
-        else:
-            nxt_itemsets = np.zeros((0, k), dtype=np.int32)
-            nxt_counts = np.zeros(0, dtype=np.int64)
-            nxt_bits = np.zeros((0, prep.l_bits.shape[1]), dtype=np.uint32)
-
-        ls.stored = nxt_itemsets.shape[0]
-        ls.level_bytes = nxt_bits.nbytes + (level.bits.nbytes if level.bits is not None else 0)
-        ls.time_total = time.perf_counter() - lt0
-        stats.append(ls)
-
-        grandparent_index = level_index
-        level = Level(k=k, itemsets=nxt_itemsets, counts=nxt_counts, bits=nxt_bits)
-        level_index = ItemsetIndex(level.itemsets, level.counts, n_symbols=prep.n_l)
-        k += 1
-
-        if on_level_end is not None:
-            on_level_end(
-                k - 1,
-                MiningState(
-                    results=results,
-                    stats=stats,
-                    level=level,
-                    grandparent_index=grandparent_index,
-                    next_k=k,
-                ),
-            )
+    mine_levels(
+        prep,
+        config,
+        make_pipeline,
+        results,
+        stats,
+        frontier=frontier,
+        grandparent_index=grandparent_index,
+        start_k=start_k,
+        on_level_end=on_level_end,
+        make_state=make_state,
+    )
 
     return MiningResult(
         itemsets=results,

@@ -123,6 +123,36 @@ class BitsetPlacement(Protocol):
         array. Batch padding rows carry weight 0."""
         ...
 
+    def prepare_frontier(self, itemsets: np.ndarray, counts: np.ndarray, n_symbols: int) -> Any:
+        """Make one BFS level's *id table* resident for frontier ops
+        (candidate generation + support tests). Host returns the exact
+        ``ItemsetIndex`` of the reference path; device/mesh upload the
+        padded id table and packed sorted parent key table."""
+        ...
+
+    def frontier_dispatch(self, state: Any, lo: int, hi: int, n_pairs: int):
+        """Generate + support-test the candidate pairs of one prefix-group
+        span. Host returns ``(CandidateBatch, ok)`` numpy (today's path);
+        device/mesh return ``(pairs (bucket, 2), ok (bucket,))`` device
+        arrays, padding rows marked not-ok."""
+        ...
+
+    def frontier_mask(self, state: Any, pairs, ok):
+        """Neutralise pruned candidates (self-pairs -> CLASS_SKIP) without
+        reordering; returns ``(pairs, n_ok)`` placement-native."""
+        ...
+
+    def frontier_partition(self, classes):
+        """One compaction pass over fused class codes: returns ``(order,
+        n_emit, n_store)`` placement-native, segments in candidate order."""
+        ...
+
+    def release(self, state: Any) -> None:
+        """Eagerly drop device buffers a :meth:`prepare` /
+        :meth:`prepare_frontier` state owns (level retirement) — buffers the
+        caller handed in stay alive."""
+        ...
+
     def describe(self) -> dict:
         """Human/JSON-friendly placement info for ``/stats``."""
         ...
@@ -168,6 +198,38 @@ class HostPlacement:
 
         return coverage_accumulate_host(state, padded_sets, padded_weights)
 
+    # -- frontier (the numpy reference path, bit-identical by construction) --
+
+    def prepare_frontier(self, itemsets, counts, n_symbols: int):
+        from .support import ItemsetIndex
+
+        return ItemsetIndex(itemsets, counts, n_symbols=n_symbols)
+
+    def frontier_dispatch(self, state, lo: int, hi: int, n_pairs: int):
+        """Numpy reference: materialise the span's candidate batch
+        (``repeat``/``cumsum``) and run the packed-key support test — exactly
+        the pre-frontier host path, shifted behind the placement API."""
+        from .prefix import CandidateBatch, Level, generate_candidates
+        from .support import support_test
+
+        itemsets = state.itemsets[lo:hi].astype(np.int32)
+        counts = np.zeros(hi - lo, dtype=np.int64)
+        batch = generate_candidates(Level(k=0, itemsets=itemsets, counts=counts, bits=None))
+        batch = CandidateBatch(
+            i_idx=batch.i_idx + lo, j_idx=batch.j_idx + lo, itemsets=batch.itemsets
+        )
+        return batch, support_test(batch.itemsets, state)
+
+    def frontier_mask(self, state, pairs, ok):
+        return pairs[ok], int(ok.sum())
+
+    def frontier_partition(self, classes):
+        order = np.argsort(classes, kind="stable")
+        return order, int((classes == 1).sum()), int((classes == 2).sum())
+
+    def release(self, state) -> None:
+        pass  # host arrays are the caller's; nothing device-side to drop
+
     def describe(self) -> dict:
         return {"kind": self.kind, "engine": "numpy", "devices": 0}
 
@@ -208,19 +270,21 @@ class DevicePlacement:
         self.donate = jax.default_backend() in ("tpu", "gpu")
 
     def prepare(self, bits, parent_counts, tau: int, *, fused_classify: bool):
+        owned = not isinstance(bits, jax.Array)  # fresh upload -> releasable
         return (
             jnp.asarray(bits),
             jnp.asarray(np.asarray(parent_counts), dtype=jnp.int32),
             jnp.int32(int(tau)),
             int(bits.shape[1]),
             fused_classify,
+            owned,
         )
 
     def padded_size(self, m: int, *, pad_buckets: bool = True) -> int:
         return _ops.next_bucket(m) if pad_buckets else m
 
     def dispatch(self, state, padded_pairs: np.ndarray, write_children: bool):
-        bits, pc, tau, n_words, fused = state
+        bits, pc, tau, n_words, fused, _owned = state
         bucket = int(padded_pairs.shape[0])
         key = (
             self.engine,
@@ -282,6 +346,86 @@ class DevicePlacement:
         )
         return fn(state, jnp.asarray(padded_sets), jnp.asarray(padded_weights))
 
+    # -- frontier -----------------------------------------------------------
+
+    def prepare_frontier(self, itemsets, counts, n_symbols: int):
+        from ..kernels.frontier import ops as _fops
+
+        itemsets = np.asarray(itemsets, dtype=np.int32)
+        ids, keys, t_pad = _fops.make_level_tables(itemsets, n_symbols)
+        from .prefix import group_reps
+
+        return {
+            "k": int(itemsets.shape[1]),
+            "n_symbols": int(n_symbols),
+            "t": int(itemsets.shape[0]),
+            "t_pad": t_pad,
+            "ids": jnp.asarray(ids),
+            "keys": jnp.asarray(keys),
+            "reps": group_reps(itemsets).astype(np.int32),
+        }
+
+    def frontier_dispatch(self, state, lo: int, hi: int, n_pairs: int):
+        from ..kernels.frontier import ops as _fops
+
+        row_bucket, bucket = _fops.gen_buckets(hi - lo, n_pairs)
+        key = (
+            "gen-support",
+            state["k"],
+            state["n_symbols"],
+            state["t_pad"],
+            row_bucket,
+            bucket,
+        )
+        fn = _fops.EXEC_CACHE.get(
+            key,
+            lambda: _fops.build_gen_support(
+                k=state["k"],
+                n_symbols=state["n_symbols"],
+                t_pad=state["t_pad"],
+                row_bucket=row_bucket,
+                bucket=bucket,
+            ),
+        )
+        reps_b = _fops.pad_reps(state["reps"][lo:hi], row_bucket)
+        return fn(
+            state["ids"],
+            state["keys"],
+            jnp.asarray(reps_b),
+            jnp.int32(lo),
+            jnp.int32(n_pairs),
+        )
+
+    def frontier_mask(self, state, pairs, ok):
+        from ..kernels.frontier import ops as _fops
+
+        fn = _fops.mask_pruned  # module-level jit: re-traces per shape
+        return fn(pairs, ok)
+
+    def frontier_partition(self, classes):
+        from ..kernels.frontier import ops as _fops
+
+        fn = _fops.partition  # module-level jit: re-traces per shape
+        return fn(classes)
+
+    def release(self, state) -> None:
+        """Retire a level eagerly: delete the device buffers this placement
+        uploaded itself. Arrays the caller passed in (an already-resident
+        ``jax.Array`` — e.g. the dataset store's version cache, or child
+        bitsets chained from the previous level) are left alone."""
+        if isinstance(state, dict):  # frontier state: ids/keys are uploads
+            for name in ("ids", "keys"):
+                arr = state.get(name)
+                if isinstance(arr, jax.Array) and not arr.is_deleted():
+                    arr.delete()
+            return
+        if isinstance(state, tuple) and len(state) == 6:
+            bits, pc, *_rest, owned = state
+            if owned:
+                for arr in (bits, pc):
+                    if isinstance(arr, jax.Array) and not arr.is_deleted():
+                        arr.delete()
+
     def describe(self) -> dict:
         return {
             "kind": self.kind,
@@ -315,10 +459,22 @@ class MeshPlacement:
         *,
         pair_axes: tuple[str, ...] = ("data",),
         word_axis: str | None = None,
+        device_frontier: bool | None = None,
     ):
         self.mesh = mesh
         self.pair_axes = tuple(pair_axes)
         self.word_axis = word_axis
+        # mesh frontier ops re-shard stored children between levels, so each
+        # batch runs a handful of small collectives (partition cumsum, child
+        # all-gather). Real accelerator backends do these in microseconds;
+        # the forced-host CPU mesh emulates them with thread rendezvous that
+        # stalls for seconds. Same gating idiom as the donating kernels:
+        # default on for tpu/gpu, opt-in (tests, experiments) on cpu.
+        self.use_device_frontier = (
+            jax.default_backend() in ("tpu", "gpu")
+            if device_frontier is None
+            else device_frontier
+        )
         self.pair_shards = int(np.prod([mesh.shape[a] for a in self.pair_axes]))
         self.word_shards = int(mesh.shape[word_axis]) if word_axis else 1
         self.store_word_tile = self.word_shards
@@ -353,11 +509,15 @@ class MeshPlacement:
         return _ops.EXEC_CACHE.get(key, build)
 
     def prepare(self, bits, parent_counts, tau: int, *, fused_classify: bool):
+        owned = not isinstance(bits, jax.Array)  # fresh placement -> releasable
+        pc = np.asarray(parent_counts, dtype=np.int32)
         return (
             self.put_bits(bits),
-            np.asarray(parent_counts, dtype=np.int32),
+            pc,
+            jnp.asarray(pc),  # device copy for device-generated pair batches
             jnp.int32(int(tau)),
             fused_classify,
+            owned,
         )
 
     def padded_size(self, m: int, *, pad_buckets: bool = True) -> int:
@@ -367,8 +527,9 @@ class MeshPlacement:
         padded_m, _ = balanced_blocks(bucket, self.pair_shards)
         return padded_m
 
-    def dispatch(self, state, padded_pairs: np.ndarray, write_children: bool):
-        bits, pc, tau, fused = state
+    def dispatch(self, state, padded_pairs, write_children: bool):
+        bits, pc, pc_dev, tau, fused, _owned = state
+        device_pairs = isinstance(padded_pairs, jax.Array)
         pairs_j = jax.device_put(jnp.asarray(padded_pairs), self._pairs_sharding)
         if not fused:
             fn = self._step_fn(False, write_children)
@@ -376,10 +537,15 @@ class MeshPlacement:
                 child, cnt = fn(bits, pairs_j)
                 return child, cnt, None
             return None, fn(bits, pairs_j), None
-        # padding rows are (0, 0) self-pairs, so their minp is pc[0] and the
-        # fused classifier marks them CLASS_SKIP (count == min parent count)
-        minp = np.minimum(pc[padded_pairs[:, 0]], pc[padded_pairs[:, 1]])
-        minp_j = jax.device_put(jnp.asarray(minp), self._minp_sharding)
+        # padding rows are self-pairs, so their minp is their parent count and
+        # the fused classifier marks them CLASS_SKIP (count == min parent
+        # count). Device-generated frontier batches never leave the device:
+        # their minp gathers from the resident count copy.
+        if device_pairs:
+            minp = jnp.minimum(pc_dev[padded_pairs[:, 0]], pc_dev[padded_pairs[:, 1]])
+        else:
+            minp = jnp.asarray(np.minimum(pc[padded_pairs[:, 0]], pc[padded_pairs[:, 1]]))
+        minp_j = jax.device_put(minp, self._minp_sharding)
         fn = self._step_fn(True, write_children)
         if write_children:
             return fn(bits, pairs_j, minp_j, tau)
@@ -418,6 +584,95 @@ class MeshPlacement:
         sets_j = jax.device_put(jnp.asarray(padded_sets), self._pairs_sharding)
         wt_j = jax.device_put(jnp.asarray(padded_weights), self._minp_sharding)
         return fn(state, sets_j, wt_j)
+
+    # -- frontier -----------------------------------------------------------
+
+    def prepare_frontier(self, itemsets, counts, n_symbols: int):
+        from ..kernels.frontier import ops as _fops
+        from .prefix import group_reps
+
+        itemsets = np.asarray(itemsets, dtype=np.int32)
+        ids, keys, t_pad = _fops.make_level_tables(itemsets, n_symbols)
+        repl = NamedSharding(self.mesh, P(None, None))
+        return {
+            "k": int(itemsets.shape[1]),
+            "n_symbols": int(n_symbols),
+            "t": int(itemsets.shape[0]),
+            "t_pad": t_pad,
+            # id/key tables replicate over the mesh (the shared-memory
+            # analogue); only the pair axis of the support test shards
+            "ids": jax.device_put(jnp.asarray(ids), repl),
+            "keys": jax.device_put(jnp.asarray(keys), repl),
+            "reps": group_reps(itemsets).astype(np.int32),
+        }
+
+    def frontier_dispatch(self, state, lo: int, hi: int, n_pairs: int):
+        from ..kernels.frontier import ops as _fops
+        from ..kernels.frontier.frontier import pack_params
+        from . import sharded as _sh
+
+        row_bucket = _fops.next_bucket(hi - lo, 16)
+        bucket = self.padded_size(n_pairs)
+        gen_fn = _fops.EXEC_CACHE.get(
+            ("gen", row_bucket, bucket), lambda: _fops.build_gen(bucket=bucket)
+        )
+        reps_b = _fops.pad_reps(state["reps"][lo:hi], row_bucket)
+        pairs, valid = gen_fn(jnp.asarray(reps_b), jnp.int32(lo), jnp.int32(n_pairs))
+        if state["k"] < 2:  # candidate width 2: both subsets stored parents
+            return pairs, valid
+        bits_, ipw, _ = pack_params(state["n_symbols"], state["k"])
+        key = (
+            "mesh-support",
+            self.mesh,
+            self.pair_axes,
+            state["k"],
+            state["n_symbols"],
+            state["t_pad"],
+            bucket,
+        )
+        fn = _fops.EXEC_CACHE.get(
+            key,
+            lambda: _sh.sharded_frontier_support_step(
+                self.mesh,
+                pair_axes=self.pair_axes,
+                k=state["k"],
+                t_pad=state["t_pad"],
+                bits=bits_,
+                ipw=ipw,
+            )[0],
+        )
+        pairs_sh = jax.device_put(pairs, self._pairs_sharding)
+        valid_sh = jax.device_put(valid, self._minp_sharding)
+        ok = fn(state["ids"], state["keys"], pairs_sh, valid_sh)
+        return pairs, ok
+
+    def frontier_mask(self, state, pairs, ok):
+        from ..kernels.frontier import ops as _fops
+
+        fn = _fops.mask_pruned  # module-level jit: re-traces per shape
+        return fn(jnp.asarray(pairs), jnp.asarray(ok))
+
+    def frontier_partition(self, classes):
+        from ..kernels.frontier import ops as _fops
+
+        fn = _fops.partition  # module-level jit: re-traces per shape
+        return fn(jnp.asarray(classes))
+
+    def release(self, state) -> None:
+        """Eager level retirement on the mesh — same ownership rule as the
+        single-device placement (see :meth:`DevicePlacement.release`)."""
+        if isinstance(state, dict):
+            for name in ("ids", "keys"):
+                arr = state.get(name)
+                if isinstance(arr, jax.Array) and not arr.is_deleted():
+                    arr.delete()
+            return
+        if isinstance(state, tuple) and len(state) == 6:
+            bits, _pc, pc_dev, *_rest, owned = state
+            if owned:
+                for arr in (bits, pc_dev):
+                    if isinstance(arr, jax.Array) and not arr.is_deleted():
+                        arr.delete()
 
     def describe(self) -> dict:
         return {

@@ -18,7 +18,14 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["Level", "CandidateBatch", "generate_candidates", "prefix_group_sizes"]
+__all__ = [
+    "Level",
+    "CandidateBatch",
+    "generate_candidates",
+    "prefix_group_sizes",
+    "group_reps",
+    "iter_group_spans",
+]
 
 
 @dataclasses.dataclass
@@ -66,21 +73,31 @@ def prefix_group_sizes(itemsets: np.ndarray) -> np.ndarray:
     return np.bincount(group_id).astype(np.int64)
 
 
-def iter_candidate_batches(level: Level, max_pairs: int):
-    """Yield CandidateBatch objects bounded by ~max_pairs (paper §6.1 level
-    streaming): consecutive prefix groups are packed until the pair budget is
-    reached, so candidate tables never materialise a whole level's join at
-    once. A single group larger than the budget is emitted alone (pairs
-    cannot cross groups).
-    """
-    t, k = level.itemsets.shape
-    if t < 2:
-        return
-    sizes = prefix_group_sizes(level.itemsets)
+def group_reps(itemsets: np.ndarray) -> np.ndarray:
+    """Per-row join run lengths: row ``r`` (local index ``l`` in a prefix
+    group of size ``c``) is the *I* of ``c - 1 - l`` candidate pairs. These
+    run lengths are the input of both the host ``repeat``/``cumsum``
+    enumeration and the device frontier's ``cumsum``/``searchsorted`` one."""
+    t = itemsets.shape[0]
+    sizes = prefix_group_sizes(itemsets)
+    starts = np.zeros(len(sizes), dtype=np.int64)
+    starts[1:] = np.cumsum(sizes)[:-1]
+    group_id = np.repeat(np.arange(len(sizes)), sizes)
+    local = np.arange(t, dtype=np.int64) - starts[group_id]
+    return sizes[group_id] - 1 - local
+
+
+def iter_group_spans(sizes: np.ndarray, max_pairs: int):
+    """Yield ``(row_lo, row_hi, n_pairs)`` batch spans (paper §6.1 level
+    streaming): consecutive prefix groups are packed until the pair budget
+    is reached, so candidate tables never materialise a whole level's join
+    at once. A single group larger than the budget is emitted alone (pairs
+    cannot cross groups). Both the host path and the device frontier batch
+    over the same spans, which is what keeps their per-level stats
+    bit-identical."""
     pair_counts = sizes * (sizes - 1) // 2
     starts = np.zeros(len(sizes), dtype=np.int64)
     starts[1:] = np.cumsum(sizes)[:-1]
-
     g = 0
     while g < len(sizes):
         acc = 0
@@ -90,6 +107,20 @@ def iter_candidate_batches(level: Level, max_pairs: int):
             g_end += 1
         row_lo = int(starts[g])
         row_hi = int(starts[g_end - 1] + sizes[g_end - 1]) if g_end > g else row_lo
+        yield row_lo, row_hi, int(acc)
+        g = g_end
+
+
+def iter_candidate_batches(level: Level, max_pairs: int):
+    """Yield CandidateBatch objects bounded by ~max_pairs (see
+    :func:`iter_group_spans` for the batching plan)."""
+    t, k = level.itemsets.shape
+    if t < 2:
+        return
+    sizes = prefix_group_sizes(level.itemsets)
+    for row_lo, row_hi, n_pairs in iter_group_spans(sizes, max_pairs):
+        if n_pairs == 0:
+            continue
         sub = Level(
             k=level.k,
             itemsets=level.itemsets[row_lo:row_hi],
@@ -103,7 +134,6 @@ def iter_candidate_batches(level: Level, max_pairs: int):
                 j_idx=batch.j_idx + row_lo,
                 itemsets=batch.itemsets,
             )
-        g = g_end
 
 
 def generate_candidates(level: Level) -> CandidateBatch:
@@ -117,13 +147,7 @@ def generate_candidates(level: Level) -> CandidateBatch:
     if t < 2:
         return empty
 
-    sizes = prefix_group_sizes(level.itemsets)
-    starts = np.zeros(len(sizes), dtype=np.int64)
-    starts[1:] = np.cumsum(sizes)[:-1]
-    group_id = np.repeat(np.arange(len(sizes)), sizes)
-    local = np.arange(t, dtype=np.int64) - starts[group_id]
-    # row r (local index l in a group of size c) is the "I" of (c - 1 - l) pairs
-    reps = sizes[group_id] - 1 - local
+    reps = group_reps(level.itemsets)
     total = int(reps.sum())
     if total == 0:
         return empty

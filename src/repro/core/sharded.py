@@ -46,6 +46,7 @@ __all__ = [
     "sharded_level_classify_step",
     "sharded_level_classify_count_step",
     "sharded_coverage_step",
+    "sharded_frontier_support_step",
     "make_sharded_intersect",
     "make_sharded_pipeline",
     "pad_words",
@@ -220,6 +221,40 @@ def sharded_coverage_step(
         in_specs=in_specs,
         out_specs=out_specs,
     )
+    return jax.jit(fn), in_specs, out_specs
+
+
+def sharded_frontier_support_step(
+    mesh: Mesh,
+    *,
+    pair_axes: tuple[str, ...] = ("data",),
+    k: int = 2,
+    t_pad: int = 16,
+    bits: int = 1,
+    ipw: int = 1,
+):
+    """Frontier support-test body, sharded over the pair axes:
+    (ids, keys, pairs, valid) -> ok.
+
+    ids: (t_pad, k) int32 and keys: (t_pad, w) int32, replicated P(None,
+    None) — the parent id table and packed sorted key table are the shared
+    (read-only) side, mirroring the level bodies' replicated bitsets;
+    pairs: (M, 2) int32 sharded P(pair_axes, None); valid: (M,) bool
+    P(pair_axes); ok: (M,) bool P(pair_axes). Each pair shard binary-searches
+    its own candidates' prefix-drop subsets — no collective at all (the
+    paper's "no inter-thread communication" §4.4.4 holds exactly here).
+    """
+    from ..kernels.frontier.frontier import support_ok_body
+
+    in_specs = (P(None, None), P(None, None), P(pair_axes, None), P(pair_axes))
+    out_specs = P(pair_axes)
+
+    def body(ids, keys, pairs, valid):
+        return support_ok_body(
+            ids, keys, pairs, valid, k=k, t_pad=t_pad, bits=bits, ipw=ipw
+        )
+
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return jax.jit(fn), in_specs, out_specs
 
 

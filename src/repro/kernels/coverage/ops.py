@@ -19,7 +19,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from ..intersect.ops import ExecutableCache, _largest_divisor_tile
+from ...core.exec_cache import exec_family
+from ..intersect.ops import _largest_divisor_tile
 from . import coverage as _k
 from .ref import acc_to_record_counts, coverage_accumulate_ref
 
@@ -31,10 +32,10 @@ __all__ = [
     "reset_coverage_cache",
 ]
 
-# Coverage executables get their own cache (same mechanics as the intersect
-# EXEC_CACHE) so /stats can report coverage-kernel warmth separately from the
-# mining buckets.
-EXEC_CACHE = ExecutableCache()
+# Coverage executables are the ``coverage`` family of the process-wide
+# ``repro.core.exec_cache`` registry — one shared cache, per-family counters,
+# one ``executables`` section in /stats.
+EXEC_CACHE = exec_family("coverage")
 
 _JIT_COVERAGE_REF = None  # bound lazily so importing this module stays cheap
 

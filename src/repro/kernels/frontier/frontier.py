@@ -1,0 +1,253 @@
+"""Device bodies for the BFS level frontier (Alg. 1 lines 11-29 on device).
+
+Three ops make a level transition device-to-device:
+
+1. **Candidate-pair generation** (:func:`gen_support_body`): the prefix-join
+   pair list of a batch of prefix groups is materialised from the groups'
+   run lengths with ``repeat``/``cumsum`` arithmetic — the device analogue
+   of ``core.prefix.generate_candidates``, bit-identical in pair order
+   (pairs are emitted in lexicographic candidate order).
+2. **Support-itemset test** (same fused body): every candidate's prefix-drop
+   subsets are packed into multiword int31 keys and binary-searched against
+   the packed **parent key table** — the device analogue of
+   ``core.support.ItemsetIndex``'s ``searchsorted``. Both are exact, so the
+   boolean verdicts are identical. Support-pruned pairs are then
+   neutralised in place (:func:`mask_pruned_body`: self-pairs, which the
+   fused classifier marks CLASS_SKIP) — no reorder, so pair order stays
+   candidate order end to end.
+3. **Emit/store partitioning** (:func:`partition_body`): one compaction
+   pass (stable per-class ranks via ``cumsum`` + scatter — no sort) groups
+   a classified batch into [skip | emit | store] segments preserving
+   candidate order, so the host drains the emit segment (a few ints per
+   emitted itemset) and the store segment's child bitsets never leave the
+   device.
+
+Key packing: items are positions into ``L^<`` (``n_symbols`` of them), each
+``b = bit_length(n_symbols - 1)`` bits. ``31 // b`` items pack big-endian
+into each int32 word (no item straddles words, so word-wise lexicographic
+order equals itemset lexicographic order, and the parent table — already
+lex-sorted by construction — needs no device sort). Sentinel padding rows
+are ``INT32_MAX`` in every word; a real subset query can never equal a
+sentinel because itemsets have strictly increasing members, so an all-max
+query row is impossible for the widths (>= 2) the support test sees.
+
+Everything here is pure traced jnp — jit binding, bucketing and the
+executable cache live in ``ops.py``; the numpy mirrors used for kernel-level
+parity tests live in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+__all__ = [
+    "SENTINEL",
+    "pack_params",
+    "pack_cols",
+    "lower_bound",
+    "lookup_keys",
+    "gen_pairs_body",
+    "support_ok_body",
+    "gen_support_body",
+    "mask_pruned_body",
+    "partition_body",
+]
+
+SENTINEL = np.int32(2**31 - 1)
+
+
+def pack_params(n_symbols: int, k: int) -> tuple[int, int, int]:
+    """``(bits per item, items per word, words)`` for width-``k`` keys."""
+    b = max(1, int(n_symbols - 1).bit_length()) if n_symbols > 1 else 1
+    ipw = max(1, 31 // b)
+    w = (k + ipw - 1) // ipw
+    return b, ipw, w
+
+
+def pack_cols(cols, b: int, ipw: int):
+    """Pack ``k`` item columns (list of (M,) int32 arrays, lexicographic
+    order) into ``(M, w)`` int32 key words, big-endian within each word."""
+    k = len(cols)
+    words = []
+    for jw in range((k + ipw - 1) // ipw):
+        seg = cols[jw * ipw : (jw + 1) * ipw]
+        word = jnp.zeros_like(cols[0])
+        for s, col in enumerate(seg):
+            word = word | (col.astype(jnp.int32) << jnp.int32(b * (ipw - 1 - s)))
+        words.append(word)
+    return jnp.stack(words, axis=1)
+
+
+def _lex_lt(a, q, w: int):
+    """Lexicographic ``a < q`` over ``(…, w)`` word vectors (unrolled)."""
+    lt = jnp.zeros(a.shape[:-1], dtype=bool)
+    eq = jnp.ones(a.shape[:-1], dtype=bool)
+    for wi in range(w):
+        lt = lt | (eq & (a[..., wi] < q[..., wi]))
+        eq = eq & (a[..., wi] == q[..., wi])
+    return lt
+
+
+def lower_bound(table, queries, *, t_pad: int):
+    """First index whose key >= query, per query row.
+
+    ``table`` is ``(t_pad, w)`` sorted (sentinel-padded to a power of two);
+    the classic branchless bisection runs ``log2(t_pad)`` gather+compare
+    steps, all on device.
+    """
+    w = table.shape[1]
+    pos = jnp.zeros(queries.shape[0], dtype=jnp.int32)
+    step = t_pad >> 1
+    while step >= 1:
+        cand = pos + jnp.int32(step)
+        row = table[cand - 1]
+        pos = jnp.where(_lex_lt(row, queries, w), cand, pos)
+        step >>= 1
+    return pos
+
+
+def lookup_keys(table, queries, *, t_pad: int):
+    """Exact membership of each query key in the sorted table."""
+    pos = lower_bound(table, queries, t_pad=t_pad)
+    row = table[jnp.minimum(pos, jnp.int32(t_pad - 1))]
+    return jnp.all(row == queries, axis=-1)
+
+
+def gen_pairs_body(reps_b, lo, mb, *, bucket: int):
+    """Candidate (i, j) pair indices for one prefix-group batch.
+
+    ``reps_b`` is the zero-padded run-length slice ``reps[lo:hi]`` (row ``r``
+    of the batch is the *I* of ``reps_b[r]`` joins); the batch's ``mb``
+    pairs are enumerated with ``repeat``/``cumsum`` — row indices repeat by
+    their run lengths, and each pair's *J* offset is its rank within the
+    row's run. Rows ``p >= mb`` are padding and masked invalid (their
+    indices collapse to the in-range ``lo``).
+    """
+    p = jnp.arange(bucket, dtype=jnp.int32)
+    reps_i = reps_b.astype(jnp.int32)
+    cum = jnp.cumsum(reps_i)
+    rows = jnp.arange(reps_b.shape[0], dtype=jnp.int32)
+    # row index per pair: the repeat/cumsum enumeration (padding past the
+    # batch's mb pairs repeats the final row, masked below)
+    i_cl = jnp.repeat(rows, reps_i, total_repeat_length=bucket)
+    off = cum[i_cl] - reps_i[i_cl]
+    j_loc = p - off + i_cl + 1
+    valid = p < mb
+    i = jnp.where(valid, lo + i_cl, lo)
+    j = jnp.where(valid, lo + j_loc, lo)
+    return i, j, valid
+
+
+def support_ok_body(
+    itemsets,
+    key_table,
+    pairs,
+    valid,
+    *,
+    k: int,
+    t_pad: int,
+    bits: int,
+    ipw: int,
+):
+    """Support-itemset test (Alg. 1 line 23) for generated pairs.
+
+    The candidate of pair ``(i, j)`` is ``itemsets[i] + last(itemsets[j])``;
+    the two subsets dropping one of the joined parents are stored by
+    construction, so only the ``k-1`` prefix-drop subsets need lookups
+    (candidate width ``k+1 >= 3``). Shard-friendly: ``pairs``/``valid`` may
+    be a pair shard while ``itemsets``/``key_table`` are replicated — this is
+    what ``core.sharded.sharded_frontier_support_step`` maps over the mesh's
+    pair axes. Verdicts are identical to ``core.support.support_test``.
+    """
+    i, j = pairs[:, 0], pairs[:, 1]
+    prefix = itemsets[i]  # (m, k) — the I parent supplies the prefix
+    last_j = itemsets[j, k - 1]  # J's last item completes the candidate
+    ok = valid
+    if k >= 2:
+        cand_cols = [prefix[:, c] for c in range(k)] + [last_j]
+        for drop in range(k - 1):
+            sub_cols = [cand_cols[c] for c in range(k + 1) if c != drop]
+            queries = pack_cols(sub_cols, bits, ipw)
+            ok = ok & lookup_keys(key_table, queries, t_pad=t_pad)
+    return ok
+
+
+def gen_support_body(
+    itemsets,
+    key_table,
+    reps_b,
+    lo,
+    mb,
+    *,
+    k: int,
+    bucket: int,
+    t_pad: int,
+    bits: int,
+    ipw: int,
+):
+    """Fused candidate generation + support-itemset test for one batch.
+
+    ``itemsets`` is the (padded) parent id table, ``key_table`` the packed
+    sorted parent keys. Returns ``(pairs (bucket, 2) int32, ok (bucket,)
+    bool)`` where ``ok`` is False for padding rows and for candidates with a
+    missing (k-1)-subset.
+    """
+    i, j, valid = gen_pairs_body(reps_b, lo, mb, bucket=bucket)
+    pairs = jnp.stack([i, j], axis=1)
+    ok = support_ok_body(
+        itemsets, key_table, pairs, valid, k=k, t_pad=t_pad, bits=bits, ipw=ipw
+    )
+    return pairs, ok
+
+
+def mask_pruned_body(pairs, ok):
+    """Neutralise support-pruned candidates in place (no reorder).
+
+    Pruned (and padding) rows become self-pairs of the batch's first row,
+    which the fused classifier marks CLASS_SKIP (count == min parent count)
+    — so the intersect kernel never *classifies* a pruned candidate, pair
+    order stays candidate order (the partition pass therefore yields
+    candidate-ordered emit/store segments), and the op is purely
+    elementwise. Returns ``(pairs, n_ok)`` with ``n_ok`` a device scalar —
+    the host only syncs on it for the stats counters, after the batch is
+    dispatched.
+    """
+    fill = pairs[0, 0]
+    i = jnp.where(ok, pairs[:, 0], fill)
+    j = jnp.where(ok, pairs[:, 1], fill)
+    return jnp.stack([i, j], axis=1), jnp.sum(ok).astype(jnp.int32)
+
+
+def partition_body(classes):
+    """One compaction pass over fused-classify codes: stable ranks per class
+    (``cumsum`` + scatter, no sort) group the batch into [skip | emit |
+    store] segments, each preserving candidate order (so host emission order
+    matches the host reference path bit-for-bit). Returns ``(order, n_emit,
+    n_store)`` where ``order`` lists original batch indices segment by
+    segment — exactly a stable argsort by class code."""
+    emit = classes == 1
+    store = classes == 2
+    e_i = emit.astype(jnp.int32)
+    s_i = store.astype(jnp.int32)
+    n_emit = jnp.sum(e_i)
+    n_store = jnp.sum(s_i)
+    b = classes.shape[0]
+    n_skip = b - n_emit - n_store
+    skip_i = 1 - e_i - s_i
+    pos = jnp.where(
+        emit,
+        n_skip + jnp.cumsum(e_i) - 1,
+        jnp.where(
+            store,
+            n_skip + n_emit + jnp.cumsum(s_i) - 1,
+            jnp.cumsum(skip_i) - 1,
+        ),
+    )
+    order = (
+        jnp.zeros(b, dtype=jnp.int32)
+        .at[pos]
+        .set(jnp.arange(b, dtype=jnp.int32))
+    )
+    return order, n_emit, n_store

@@ -1,0 +1,127 @@
+"""Jit binding, bucketing and the executable-cache family for the frontier ops.
+
+Mirrors ``kernels.intersect.ops`` at a smaller scale: everything static —
+the parent width ``k``, the packing geometry, the padded table size, the row
+and pair buckets — is resolved once per executable bucket in the
+``build_*`` functions, and the bound jitted callables are shared
+process-wide through the ``frontier`` family of the unified
+``repro.core.exec_cache`` registry (so warm service requests and successive
+levels of similar size never re-trace).
+
+Bucketing: parent-level tables pad to a power of two (``table_pad``) so the
+bisection step count is static and executables are reused across levels of
+similar size; batch row/pair counts pad to the same power-of-two buckets the
+intersect pipeline uses (``next_bucket``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ...core.exec_cache import exec_family
+from ..intersect.ops import next_bucket
+from . import frontier as _f
+from .frontier import SENTINEL, pack_params
+from .ref import key_table_np
+
+__all__ = [
+    "EXEC_CACHE",
+    "frontier_cache_stats",
+    "reset_frontier_cache",
+    "table_pad",
+    "build_gen",
+    "build_gen_support",
+    "mask_pruned",
+    "partition",
+    "make_level_tables",
+    "pad_reps",
+    "gen_buckets",
+]
+
+EXEC_CACHE = exec_family("frontier")
+
+
+def frontier_cache_stats() -> dict:
+    """Snapshot of the frontier executable-bucket family (entries/hits/misses)."""
+    return EXEC_CACHE.stats()
+
+
+def reset_frontier_cache() -> None:
+    EXEC_CACHE.clear()
+
+
+def table_pad(t: int, minimum: int = 16) -> int:
+    """Power-of-two padded table size with at least one sentinel row."""
+    p = minimum
+    while p < t + 1:
+        p <<= 1
+    return p
+
+
+def make_level_tables(itemsets: np.ndarray, n_symbols: int):
+    """Host-side per-level prep for the device frontier: the padded id table
+    and the packed sorted parent key table (both tiny next to the bitsets —
+    ``(t, k)`` ints, uploaded once per level by the placement)."""
+    t, k = itemsets.shape
+    tp = table_pad(t)
+    ids = np.zeros((tp, k), dtype=np.int32)
+    ids[:t] = itemsets
+    keys = key_table_np(itemsets, n_symbols, tp)
+    return ids, keys, tp
+
+
+def build_gen(*, bucket: int):
+    """Bind the pair-generation-only body (the mesh path generates pairs
+    unsharded, then shards them over the pair axes for the support test)."""
+
+    def body(reps_b, lo, mb):
+        i, j, valid = _f.gen_pairs_body(reps_b, lo, mb, bucket=bucket)
+        return jnp.stack([i, j], axis=1), valid
+
+    return jax.jit(body)
+
+
+def build_gen_support(
+    *, k: int, n_symbols: int, t_pad: int, row_bucket: int, bucket: int
+):
+    """Bind one gen+support executable bucket:
+    ``fn(itemsets_dev, key_table_dev, reps_b, lo, mb) -> (pairs, ok)``."""
+    bits, ipw, _ = pack_params(n_symbols, k)
+
+    def body(itemsets, key_table, reps_b, lo, mb):
+        return _f.gen_support_body(
+            itemsets,
+            key_table,
+            reps_b,
+            lo,
+            mb,
+            k=k,
+            bucket=bucket,
+            t_pad=t_pad,
+            bits=bits,
+            ipw=ipw,
+        )
+
+    return jax.jit(body)
+
+
+# The mask and partition bodies have no static parameters — one module-level
+# jitted callable each (jit re-traces per shape), rather than a builder per
+# bucket, keeps the /stats executable counters meaningful.
+mask_pruned = jax.jit(_f.mask_pruned_body)
+partition = jax.jit(_f.partition_body)
+
+
+def pad_reps(reps: np.ndarray, row_bucket: int) -> np.ndarray:
+    """Zero-pad a batch's run-length slice to its row bucket."""
+    out = np.zeros(row_bucket, dtype=np.int32)
+    out[: len(reps)] = reps
+    return out
+
+
+def gen_buckets(n_rows: int, n_pairs: int) -> tuple[int, int]:
+    """(row bucket, pair bucket) for one frontier batch."""
+    return next_bucket(n_rows, 16), next_bucket(n_pairs)

@@ -50,7 +50,6 @@ count, so callers never observe padding either way.
 from __future__ import annotations
 
 import math
-import threading
 
 import numpy as np
 
@@ -180,55 +179,11 @@ _JIT_CLASSIFY_REF = jax.jit(_ref.intersect_classify_ref)
 _JIT_CLASSIFY_COUNT_REF = jax.jit(_ref.intersect_classify_count_ref)
 
 
-class ExecutableCache:
-    """Process-wide cache of bound batch-dispatch callables.
-
-    One entry per ``(engine, path flags, W, bucket, tile sizes, interpret,
-    donate)`` combination — i.e. per *executable bucket*. ``jax.jit`` already
-    memoises compiled executables by shape, but the dispatch-branch selection,
-    tile arithmetic and kernel-variant binding used to be redone on every
-    ``LevelPipeline`` dispatch of every ``mine()`` call; hoisting them here
-    makes the bucket set shared across pipelines, levels and mining requests
-    (the resident service's warm start), and makes warm-vs-cold observable
-    via hit/miss counters.
-    """
-
-    def __init__(self):
-        self._fns: dict[tuple, Any] = {}
-        self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-
-    def get(self, key: tuple, builder):
-        with self._lock:
-            fn = self._fns.get(key)
-            if fn is not None:
-                self.hits += 1
-                return fn
-            self.misses += 1
-        fn = builder()
-        with self._lock:
-            # a racing builder may have beaten us; keep the first binding so
-            # every caller shares one executable bucket
-            fn = self._fns.setdefault(key, fn)
-        return fn
-
-    def stats(self) -> dict:
-        with self._lock:
-            return {"entries": len(self._fns), "hits": self.hits, "misses": self.misses}
-
-    def clear(self) -> None:
-        with self._lock:
-            self._fns.clear()
-            self.hits = 0
-            self.misses = 0
-
-
-EXEC_CACHE = ExecutableCache()
-
-
 def executable_cache_stats() -> dict:
-    """Snapshot of the shared executable-bucket cache (entries/hits/misses)."""
+    """Snapshot of this family's executable-bucket cache (entries/hits/
+    misses). The cache itself is the ``intersect`` family of the process-wide
+    ``repro.core.exec_cache`` registry — one hit/miss surface per kernel
+    family, one ``executables`` section in ``/stats``."""
     return EXEC_CACHE.stats()
 
 
@@ -362,11 +317,15 @@ class BatchHandle:
 
     ``result()`` blocks (device->host transfer) and returns
     ``(child | None, counts int64, classes int32 | None)`` in the caller's
-    original pair order.
+    original pair order. ``raw()`` returns the placement-native (still
+    padded, possibly device-resident) ``(child, counts, classes)`` without
+    any host transfer — the device frontier consumes batches this way so
+    stored children never leave the device.
     """
 
-    def __init__(self, materialize):
+    def __init__(self, materialize, raw=None):
         self._materialize = materialize
+        self._raw = raw
         self._out = None
         self._done = False
 
@@ -376,6 +335,11 @@ class BatchHandle:
             self._materialize = None
             self._done = True
         return self._out
+
+    def raw(self):
+        if self._raw is None:
+            raise ValueError("batch was not dispatched with raw outputs")
+        return self._raw
 
 
 def build_engine_dispatch(
@@ -573,6 +537,38 @@ class LevelPipeline:
             bits, parent_counts, self.tau, fused_classify=fused_classify
         )
 
+    def retire(self) -> None:
+        """Eagerly drop this level's prepared residency (device buffers the
+        placement uploaded itself — see ``BitsetPlacement.release``). The
+        driver calls this once a level's last batch has been consumed, so
+        peak device memory tracks the two live levels of a transition
+        instead of every parent level mined so far."""
+        state, self._state = self._state, None
+        if state is not None:
+            release = getattr(self.placement, "release", None)
+            if release is not None:
+                release(state)
+
+    def submit_padded(self, pairs, m: int, write_children: bool) -> BatchHandle:
+        """Dispatch one *pre-padded* batch of device-generated pair indices.
+
+        The device frontier hands bucket-padded, locality-ordered pair
+        arrays straight from candidate generation — no host ``np.stack``,
+        no locality sort, no re-padding. ``m`` is the true pair count for
+        ``result()``'s strip; ``raw()`` exposes the padded placement-native
+        outputs for device-side partitioning.
+        """
+        child_d, cnt_d, cls_d = self.placement.dispatch(self._state, pairs, write_children)
+        n_words = self.n_words
+
+        def materialize():
+            counts = np.asarray(cnt_d)[:m].astype(np.int64)
+            child = np.asarray(child_d)[:m, :n_words] if child_d is not None else None
+            classes = np.asarray(cls_d)[:m].astype(np.int32) if cls_d is not None else None
+            return child, counts, classes
+
+        return BatchHandle(materialize, raw=(child_d, cnt_d, cls_d))
+
     def submit(self, pairs: np.ndarray, write_children: bool) -> BatchHandle:
         """Dispatch one batch of pair intersections; non-blocking on device placements."""
         m = int(pairs.shape[0])
@@ -623,3 +619,15 @@ class LegacyIntersectPipeline:
         child, counts = self._fn(self._bits, pairs, write_children)
         out = (child, counts, None)
         return BatchHandle(lambda: out)
+
+
+# EXEC_CACHE binds at the module *bottom*: importing ``repro.core.exec_cache``
+# runs ``repro.core.__init__``, which re-enters this (still-executing) module
+# for LevelPipeline and friends — by this line every name core needs is
+# already defined. Keep this import below every definition, and keep
+# ``core/exec_cache.py`` itself a stdlib-only leaf (see its import
+# discipline note).
+from ...core.exec_cache import FamilyCache as ExecutableCache  # noqa: E402
+from ...core.exec_cache import exec_family as _exec_family  # noqa: E402
+
+EXEC_CACHE = _exec_family("intersect")

@@ -16,7 +16,9 @@ Endpoints (JSON in / JSON out):
   GET  /report?tau=1&kmax=3                             -> sdc quasi-id report
   GET  /risk?tau=1&kmax=3&top=10                        -> per-record risk profile
   GET  /anonymize?tau=1&kmax=3                          -> verified masking plan
-  GET  /stats                                           -> store/placement/cache/exec/http stats
+  GET  /stats                                           -> store/placement/cache/http stats,
+                                                           unified executables section, last_mine
+                                                           per-level host/device timing split
   GET  /healthz                                         -> liveness (never gated)
 
 ``source`` in the /mine response is "cold", "incremental" or "cache" — the

@@ -35,8 +35,8 @@ from ..core.items import ItemTable
 from ..core.kyiv import KyivConfig, MiningResult, mine_preprocessed
 from ..core.placement import resolve_placement
 from ..core.preprocess import preprocess
-from ..kernels.coverage import coverage_cache_stats
-from ..kernels.intersect import LevelPipeline, executable_cache_stats
+from ..core import exec_cache
+from ..kernels.intersect import LevelPipeline
 from ..sdc.quasi import QuasiIdentifierReport, report_as_dict
 from .cache import CacheEntry, ResultCache, make_key
 from .incremental import IncrementalConfig, mine_incremental
@@ -166,6 +166,7 @@ class MiningService:
         self.scheduler = RequestScheduler(max_workers=max_workers)
         self._preps: "OrderedDict[tuple, object]" = OrderedDict()
         self._privacy = _LruCache()
+        self._last_mine_timing: dict | None = None
         self._lock = threading.Lock()
 
     @classmethod
@@ -270,6 +271,17 @@ class MiningService:
                 config,
                 self.incremental,
                 table=table,
+                # seed expansion runs through this service's placement, over
+                # the store's resident bitsets (None -> falls back to a host
+                # snapshot gather; bit-identical either way). Host placements
+                # skip the resident copy entirely — _expand_seeds would never
+                # read it, and put_bits would duplicate the whole matrix.
+                placement=self.placement,
+                resident_bits=(
+                    self.store.device_bits(version)
+                    if self.placement.kind != "host" and self.incremental.enabled
+                    else None
+                ),
             )
             if inc is not None:
                 result, info = inc
@@ -281,6 +293,15 @@ class MiningService:
         result = mine_preprocessed(
             prep, config, pipeline_factory=self._warm_pipeline_factory(version, prep, config)
         )
+        # per-level host-busy vs device-busy split of the last cold run —
+        # the /stats view of what the device frontier buys per level
+        self._last_mine_timing = {
+            "version": version,
+            "tau": tau,
+            "kmax": kmax,
+            "wall_time": result.wall_time,
+            "levels": result.timing_breakdown(),
+        }
         entry = CacheEntry(
             key=key,
             result=result,
@@ -438,8 +459,13 @@ class MiningService:
             "cache": self.cache.stats(),
             "privacy": self._privacy.stats(),
             "scheduler": self.scheduler.stats(),
-            "executables": executable_cache_stats(),
-            "coverage_executables": coverage_cache_stats(),
+            # one unified section for every kernel family's executable
+            # buckets (intersect / coverage / frontier) — per-family
+            # counters under "families", process totals at the top level
+            "executables": exec_cache.stats(),
+            # per-level timing split of the most recent cold mine (host
+            # candidate/classify work vs device dispatch+sync)
+            "last_mine": self._last_mine_timing,
         }
 
     def compact(self, keep_versions: int | None = None) -> dict:

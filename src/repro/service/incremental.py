@@ -133,14 +133,28 @@ def _expand_seeds(
     tau: int,
     kmax: int,
     budget: int,
+    *,
+    placement=None,
+    resident_bits=None,
 ) -> dict[frozenset, int] | None:
     """All minimal τ-infrequent strict supersets of any seed, up to kmax.
 
-    Returns None when the frontier exceeds ``budget`` (caller re-mines
-    cold). Every frontier node is a *frequent* superset of a seed; an
+    Level-synchronous BFS over the **resident frontier**: each wave's
+    (node × extension-item) support counts are one batched intersect
+    dispatch through the service's :class:`~repro.kernels.intersect.ops.LevelPipeline`
+    — the extension items gather from the store's placement-resident bitset
+    matrix (``resident_bits``) instead of re-gathering host levels, so the
+    hot popcount loop runs wherever mining itself runs (host numpy, one
+    device, or the mesh). Only surviving nodes' bitsets are re-derived on
+    the host (two-row ANDs) to seed the next wave.
+
+    Returns None when the explored node count exceeds ``budget`` (caller
+    re-mines cold). Every wave node is a *frequent* superset of a seed; an
     infrequent node is classified once (emit if minimal) and never extended,
     because its supersets all contain an infrequent proper subset.
     """
+    from ..kernels.intersect.ops import LevelPipeline
+
     n = table.n_rows
     freq = table.freq
     bits = table.bits
@@ -149,41 +163,93 @@ def _expand_seeds(
     if len(ext_universe) == 0:
         return found
     visited: set[frozenset] = set()
-    frontier: list[tuple[frozenset, np.ndarray]] = []
+    wave: list[tuple[frozenset, np.ndarray]] = []
     for ids in seeds:
         fs = frozenset(int(i) for i in ids)
         if len(fs) >= kmax or fs in visited:
             continue
         visited.add(fs)
-        frontier.append((fs, np.bitwise_and.reduce(bits[list(fs)], axis=0)))
+        wave.append((fs, np.bitwise_and.reduce(bits[list(fs)], axis=0)))
 
-    ext_bits = bits[ext_universe]  # gathered once; the loop below is hot
+    if placement is None:
+        from ..core.placement import HostPlacement
+
+        placement = HostPlacement()
+    on_device = getattr(placement, "kind", "host") != "host"
+    ext_host = bits[ext_universe]  # host copy: seeds the next wave's bits
+    if on_device and resident_bits is not None:
+        import jax.numpy as jnp
+
+        ext_res = jnp.asarray(resident_bits)[jnp.asarray(ext_universe)]
+    else:
+        ext_res = ext_host
+
+    e_count, w_words = ext_host.shape
+    # two budgets: nodes whose bitsets join the resident matrix per segment
+    # (the extension block is re-placed once per *segment* — usually once
+    # per wave; placing it exactly once per call would need a two-block
+    # pair addressing scheme the placement API doesn't speak, and waves are
+    # shallow by the thin-boundary-band premise), and rows per submit
+    # bounding the dispatch working set: the host placement materialises
+    # both gathered operands plus the AND, ~3 * pairs * W words per submit
+    seg_nodes = max(1, (1 << 24) // max(w_words, 1))
+    rows_per_submit = max(1, (1 << 23) // max(e_count * max(w_words, 1), 1))
     popped = 0
-    while frontier:
-        fs, fb = frontier.pop()
-        popped += 1
+    while wave:
+        popped += len(wave)
         if popped > budget:
             return None
-        # count every extension vectorised FIRST: absent extensions (the
-        # overwhelming majority in sparse data) die before any set building
-        cand_bits = ext_bits & fb[None, :]
-        counts = popcount_rows(cand_bits)
-        for idx in np.nonzero(counts)[0]:
-            x = int(ext_universe[idx])
-            if x in fs:
-                continue
-            cs = fs | {x}
-            if cs in visited:
-                continue
-            visited.add(cs)
-            cnt = int(counts[idx])
-            if cnt > tau:
-                if len(cs) < kmax:
-                    frontier.append((cs, cand_bits[idx]))
+        next_wave: list[tuple[frozenset, np.ndarray]] = []
+        for s0 in range(0, len(wave), seg_nodes):
+            seg = wave[s0 : s0 + seg_nodes]
+            f_count = len(seg)
+            wave_bits = np.stack([wb for _, wb in seg])
+            if on_device:
+                import jax.numpy as jnp
+
+                mat = jnp.concatenate([ext_res, jnp.asarray(wave_bits)], axis=0)
             else:
-                ids_t = tuple(sorted(cs))
-                if _is_minimal(bits, freq, ids_t, tau):
-                    found[cs] = cnt
+                mat = np.concatenate([ext_res, wave_bits], axis=0)
+            pipe = LevelPipeline(
+                mat,
+                np.zeros(e_count + f_count, dtype=np.int64),
+                tau=0,
+                placement=placement,
+                fused_classify=False,
+                locality_sort=False,
+            )
+            for s in range(0, f_count, rows_per_submit):
+                chunk = seg[s : s + rows_per_submit]
+                c_count = len(chunk)
+                fi = (
+                    np.repeat(np.arange(s, s + c_count, dtype=np.int64), e_count)
+                    + e_count
+                )
+                ei = np.tile(np.arange(e_count, dtype=np.int64), c_count)
+                pairs = np.stack([fi, ei], axis=1).astype(np.int32)
+                _, counts, _ = pipe.submit(pairs, False).result()
+                counts = counts.reshape(c_count, e_count)
+                for fidx, (fs, fb) in enumerate(chunk):
+                    # absent extensions (the overwhelming majority in sparse
+                    # data) die before any set building
+                    for eidx in np.nonzero(counts[fidx])[0]:
+                        x = int(ext_universe[eidx])
+                        if x in fs:
+                            continue
+                        cs = fs | {x}
+                        if cs in visited:
+                            continue
+                        visited.add(cs)
+                        cnt = int(counts[fidx, eidx])
+                        if cnt > tau:
+                            if len(cs) < kmax:
+                                next_wave.append((cs, fb & ext_host[eidx]))
+                        else:
+                            ids_t = tuple(sorted(cs))
+                            if _is_minimal(bits, freq, ids_t, tau):
+                                found[cs] = cnt
+            pipe.retire()
+        wave = next_wave
     return found
 
 
@@ -283,15 +349,22 @@ def mine_incremental(
     inc_config: IncrementalConfig | None = None,
     *,
     table: ItemTable | None = None,
+    placement=None,
+    resident_bits=None,
 ) -> tuple[MiningResult, dict] | None:
     """Delta-mine the store against a cached base result.
 
     ``table`` is an optional immutable snapshot (``DatasetStore.item_table``)
     to mine; when omitted one is taken now. Only the historical watermarks of
     ``store`` are consulted otherwise, so concurrent appends cannot skew the
-    delta. Returns ``(result, info)`` or ``None`` when the caller should
-    fall back to a cold mine (delta too large, expansion budget exhausted,
-    or a config the incremental invariants don't cover).
+    delta. ``placement``/``resident_bits`` route the promoted/new-item seed
+    expansion through the service's placement and the store's
+    device-resident bitsets (``DatasetStore.device_bits``) instead of
+    rebuilding host levels; omitted, the expansion runs on host numpy —
+    results are bit-identical either way. Returns ``(result, info)`` or
+    ``None`` when the caller should fall back to a cold mine (delta too
+    large, expansion budget exhausted, or a config the incremental
+    invariants don't cover).
     """
     inc = inc_config or IncrementalConfig()
     if not inc.enabled or config.expansion != "full" or config.kmax < 1:
@@ -340,8 +413,16 @@ def mine_incremental(
             seeds.append((a,))
 
     # 3. boundary expansion: previously-present new minimal itemsets are
-    # strict supersets of a seed
-    expanded = _expand_seeds(table, seeds, tau, kmax, inc.expansion_budget)
+    # strict supersets of a seed, explored through the resident frontier
+    expanded = _expand_seeds(
+        table,
+        seeds,
+        tau,
+        kmax,
+        inc.expansion_budget,
+        placement=placement,
+        resident_bits=resident_bits,
+    )
     if expanded is None:
         return None
 

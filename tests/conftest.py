@@ -15,6 +15,7 @@ except ImportError:
     collect_ignore = [
         "test_balance.py",
         "test_bounds.py",
+        "test_frontier_prop.py",
         "test_incremental.py",
         "test_items.py",
         "test_kyiv.py",

@@ -1,0 +1,76 @@
+"""Hypothesis sweeps: device/mesh frontier == host reference, bit-identical
+results AND per-level stats, for arbitrary random tables, thresholds and
+depths — including resume from a mid-run checkpoint.
+
+Gated in conftest.py when hypothesis is absent (the deterministic frontier
+coverage lives in tests/test_frontier.py)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import KyivConfig, itemize, mine, preprocess
+from repro.core.kyiv import mine_preprocessed
+
+table_st = st.tuples(
+    st.integers(8, 60),  # rows
+    st.integers(2, 5),  # columns
+    st.integers(2, 5),  # per-column domain
+    st.integers(1, 3),  # tau
+    st.integers(2, 4),  # kmax
+    st.integers(0, 10_000),  # seed
+)
+
+
+def _stat_tuple(s):
+    return (s.k, s.candidates, s.support_pruned, s.bound_pruned,
+            s.intersections, s.emitted, s.skipped_absent_uniform, s.stored)
+
+
+def _assert_same(ref, got):
+    assert sorted(got.itemsets) == sorted(ref.itemsets)
+    assert list(map(_stat_tuple, got.stats)) == list(map(_stat_tuple, ref.stats))
+
+
+@pytest.mark.parametrize("engine", ["jnp", "pallas"])
+@settings(max_examples=12, deadline=None)
+@given(table_st)
+def test_device_frontier_matches_host_reference(engine, params):
+    n, m, dom, tau, kmax, seed = params
+    rng = np.random.default_rng(seed)
+    D = rng.integers(0, dom, size=(n, m))
+    ref = mine(D, KyivConfig(tau=tau, kmax=kmax, engine="numpy"))
+    got = mine(D, KyivConfig(tau=tau, kmax=kmax, engine=engine))
+    _assert_same(ref, got)
+    off = mine(D, KyivConfig(tau=tau, kmax=kmax, engine=engine, device_frontier=False))
+    _assert_same(ref, off)
+
+
+@settings(max_examples=8, deadline=None)
+@given(table_st, st.integers(2, 3))
+def test_device_frontier_resume_matches_full_run(params, kill_at):
+    n, m, dom, tau, kmax, seed = params
+    rng = np.random.default_rng(seed)
+    D = rng.integers(0, dom, size=(n, m))
+    cfg = KyivConfig(tau=tau, kmax=max(kmax, kill_at + 1), engine="jnp")
+    prep = preprocess(itemize(D), cfg.tau)
+    full = mine_preprocessed(prep, cfg)
+
+    saved = {}
+
+    class Stop(Exception):
+        pass
+
+    def hook(k, state):
+        if k == kill_at:
+            saved.update(state)
+            raise Stop
+
+    try:
+        mine_preprocessed(prep, cfg, on_level_end=hook)
+    except Stop:
+        pass
+    if not saved:  # run ended before the kill level — nothing to resume
+        return
+    resumed = mine_preprocessed(prep, cfg, resume_state=saved)
+    _assert_same(full, resumed)

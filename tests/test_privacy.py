@@ -331,7 +331,7 @@ def test_service_risk_and_plan_cached_per_version():
 
     stats = svc.stats()
     assert stats["privacy"]["hits"] >= 2
-    assert "coverage_executables" in stats
+    assert "coverage" in stats["executables"]["families"]
     svc.close()
 
 
@@ -385,7 +385,7 @@ def test_http_risk_and_anonymize_endpoints(http_service):
 
     code, stats = _req(port, "/stats")
     assert stats["privacy"]["entries"] >= 2
-    assert "coverage_executables" in stats
+    assert "coverage" in stats["executables"]["families"]
 
 
 # ---------------------------------------------------------------------------
