@@ -222,13 +222,19 @@ def mine_levels(
     start_k: int,
     on_level_end=None,
     make_state=None,
+    control=None,
 ) -> None:
     """Run Alg. 1's outer loop from level ``start_k - 1``'s stored frontier.
 
     Appends emitted itemsets to ``results`` and a ``LevelStats`` per level to
     ``stats`` (both in the exact order of the pre-frontier driver);
     ``make_state(k, frontier, grandparent_index)`` builds the
-    ``MiningState`` handed to ``on_level_end``.
+    ``MiningState`` handed to ``on_level_end``. ``control`` (a
+    ``repro.core.kyiv.RunControl``) is checked at every batch boundary and at
+    level boundaries — a tripped deadline or cancellation raises
+    ``MiningInterrupted`` with everything emitted so far already in
+    ``results`` (partial-result semantics; the caller decides what to do
+    with them).
     """
     tau, kmax = config.tau, config.kmax
     n = prep.table.n_rows
@@ -241,6 +247,8 @@ def mine_levels(
     while k <= kmax and frontier.t >= 2:
         from .kyiv import LevelStats  # deferred: kyiv imports this module
 
+        if control is not None:
+            control.check()
         ls = LevelStats(k=k)
         lt0 = time.perf_counter()
         write_children = k < kmax
@@ -271,6 +279,7 @@ def mine_levels(
                 grandparent_index,
                 n,
                 need_index,
+                control,
             )
         else:
             nxt, level_index = _advance_host(
@@ -286,6 +295,7 @@ def mine_levels(
                 batch_pairs,
                 grandparent_index,
                 n,
+                control,
             )
 
         ls.time_total = time.perf_counter() - lt0
@@ -321,6 +331,7 @@ def _advance_host(
     batch_pairs,
     grandparent_index,
     n,
+    control=None,
 ):
     """One level transition on the host reference path (also serves legacy
     ``intersect_fn`` pipelines and ``fused_classify=False``) — today's numpy
@@ -389,6 +400,8 @@ def _advance_host(
     for lo, hi, n_pairs in iter_group_spans(sizes, batch_pairs):
         if n_pairs == 0:
             continue
+        if control is not None:
+            control.check()
         ct0 = time.perf_counter()
         cand, ok = host_frontier.frontier_dispatch(fstate, lo, hi, n_pairs)
         ls.candidates += cand.m
@@ -459,6 +472,7 @@ def _advance_device(
     grandparent_index,
     n,
     need_index,
+    control=None,
 ):
     """One level transition on the device frontier.
 
@@ -554,6 +568,8 @@ def _advance_device(
     for lo, hi, n_pairs in iter_group_spans(sizes, batch_pairs):
         if n_pairs == 0:
             continue
+        if control is not None:
+            control.check()
         ls.candidates += n_pairs
         ct0 = time.perf_counter()
         pairs_d, ok_d = placement.frontier_dispatch(fstate, lo, hi, n_pairs)

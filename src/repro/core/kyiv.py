@@ -43,6 +43,7 @@ buffers are deleted), so peak device memory tracks
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Callable
 
@@ -63,12 +64,69 @@ from .support import ItemsetIndex
 __all__ = [
     "KyivConfig",
     "LevelStats",
+    "MiningInterrupted",
     "MiningResult",
     "MiningState",
+    "RunControl",
     "mine",
     "mine_preprocessed",
     "prepare",
 ]
+
+
+class MiningInterrupted(RuntimeError):
+    """A run stopped early at a batch boundary (deadline or cancellation).
+
+    Raised by :meth:`RunControl.check` inside the level loop; callers that
+    want partial-result semantics catch it (``mine_preprocessed`` does, and
+    returns the itemsets emitted so far with ``MiningResult.interrupted``
+    set to the reason)."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+@dataclasses.dataclass
+class RunControl:
+    """Deadline + cancellation for one mining run.
+
+    ``deadline`` is an absolute ``time.monotonic()`` instant (None = no
+    deadline). The level loop calls :meth:`check` at every batch boundary —
+    the run therefore stops within one batch of the deadline or of
+    :meth:`cancel` being called, never mid-kernel. Everything emitted before
+    the stop is a valid (but possibly incomplete) set of minimal
+    τ-infrequent itemsets.
+    """
+
+    deadline: float | None = None
+    _cancelled: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False
+    )
+
+    @classmethod
+    def with_timeout(cls, seconds: float | None) -> "RunControl":
+        return cls(
+            deadline=None if seconds is None else time.monotonic() + float(seconds)
+        )
+
+    def cancel(self) -> None:
+        self._cancelled.set()
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled.is_set()
+
+    def remaining(self) -> float | None:
+        if self.deadline is None:
+            return None
+        return self.deadline - time.monotonic()
+
+    def check(self) -> None:
+        if self._cancelled.is_set():
+            raise MiningInterrupted("cancelled")
+        if self.deadline is not None and time.monotonic() > self.deadline:
+            raise MiningInterrupted("deadline")
 
 # kept where it always lived; the implementation moved to core.frontier
 _expand_mirrors = expand_mirrors
@@ -165,6 +223,14 @@ class MiningResult:
     prep: Preprocessed
     config: KyivConfig
     wall_time: float
+    # "deadline" | "cancelled" when the run stopped early at a batch
+    # boundary — the itemsets list is then a valid partial answer and must
+    # not be cached or used as an incremental base
+    interrupted: str | None = None
+
+    @property
+    def completed(self) -> bool:
+        return self.interrupted is None
 
     def as_value_sets(self) -> list[tuple[tuple[tuple[int, int], ...], int]]:
         """Human-readable ((column, value), ...) form, 0-based columns."""
@@ -251,6 +317,7 @@ def mine_preprocessed(
     pipeline_factory: Callable[..., Any] | None = None,
     on_level_end: Callable[[int, "MiningState"], None] | None = None,
     resume_state: "MiningState | dict[str, Any] | None" = None,
+    control: RunControl | None = None,
 ) -> MiningResult:
     """Run Algorithm 1 on a preprocessed item table.
 
@@ -260,8 +327,11 @@ def mine_preprocessed(
     older injection contract, adapted with host-side classification.
     ``on_level_end`` receives a :class:`MiningState` at every level boundary
     (the checkpoint hook); ``resume_state`` (a ``MiningState`` or the
-    equivalent mapping from an old checkpoint) restarts there. The level
-    loop itself lives in :func:`repro.core.frontier.mine_levels`.
+    equivalent mapping from an old checkpoint) restarts there. ``control``
+    carries a per-request deadline/cancellation checked at every batch
+    boundary — an interrupted run returns the partial result with
+    ``MiningResult.interrupted`` set instead of raising. The level loop
+    itself lives in :func:`repro.core.frontier.mine_levels`.
     """
     t_start = time.perf_counter()
     table = prep.table
@@ -319,18 +389,23 @@ def mine_preprocessed(
             next_k=next_k,
         )
 
-    mine_levels(
-        prep,
-        config,
-        make_pipeline,
-        results,
-        stats,
-        frontier=frontier,
-        grandparent_index=grandparent_index,
-        start_k=start_k,
-        on_level_end=on_level_end,
-        make_state=make_state,
-    )
+    interrupted: str | None = None
+    try:
+        mine_levels(
+            prep,
+            config,
+            make_pipeline,
+            results,
+            stats,
+            frontier=frontier,
+            grandparent_index=grandparent_index,
+            start_k=start_k,
+            on_level_end=on_level_end,
+            make_state=make_state,
+            control=control,
+        )
+    except MiningInterrupted as e:
+        interrupted = e.reason
 
     return MiningResult(
         itemsets=results,
@@ -338,6 +413,7 @@ def mine_preprocessed(
         prep=prep,
         config=config,
         wall_time=time.perf_counter() - t_start,
+        interrupted=interrupted,
     )
 
 

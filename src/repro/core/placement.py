@@ -73,9 +73,65 @@ __all__ = [
     "HostPlacement",
     "DevicePlacement",
     "MeshPlacement",
+    "is_device_failure",
     "make_placement",
     "resolve_placement",
+    "set_fault_hook",
 ]
+
+# -- fault seam --------------------------------------------------------------
+#
+# Device and mesh dispatch paths call ``_guard(site)`` immediately before
+# executing on the accelerator. The hook is the one process-wide seam both
+# the fault-injection harness (``repro.service.faults``) and ad-hoc chaos
+# experiments use to simulate XLA OOMs / device loss without touching the
+# kernels; production leaves it None (a single attribute read per batch).
+# Host dispatch is deliberately unguarded — it is the degradation target and
+# must stay failure-free.
+
+_fault_hook = None
+
+
+def set_fault_hook(hook):
+    """Install ``hook(site: str)`` ahead of every device/mesh dispatch
+    (sites: "dispatch", "frontier", "coverage"). Returns the previous hook
+    so callers can restore it."""
+    global _fault_hook
+    prev, _fault_hook = _fault_hook, hook
+    return prev
+
+
+def _guard(site: str) -> None:
+    if _fault_hook is not None:
+        _fault_hook(site)
+
+
+# Substrings that mark an exception as an accelerator-runtime failure (XLA
+# OOM, device loss, transfer errors) rather than a programming error. The
+# service's degradation path only retries/degrades on these.
+_DEVICE_FAILURE_MARKERS = (
+    "RESOURCE_EXHAUSTED",
+    "out of memory",
+    "OUT_OF_MEMORY",
+    "DEVICE_LOST",
+    "device lost",
+    "FAILED_PRECONDITION: device",
+    "DATA_LOSS",
+)
+
+
+def is_device_failure(exc: BaseException) -> bool:
+    """Is ``exc`` a device/runtime failure worth retrying on, or degrading
+    Device/Mesh -> Host placement for — as opposed to a bug that would fail
+    identically on the host? Injected faults mark themselves with an
+    ``is_device_failure`` attribute; real JAX runtime errors are classified
+    by type name and message."""
+    if getattr(exc, "is_device_failure", False):
+        return True
+    if type(exc).__name__ == "XlaRuntimeError":
+        return True
+    msg = str(exc)
+    return any(marker in msg for marker in _DEVICE_FAILURE_MARKERS)
 
 
 @runtime_checkable
@@ -284,6 +340,7 @@ class DevicePlacement:
         return _ops.next_bucket(m) if pad_buckets else m
 
     def dispatch(self, state, padded_pairs: np.ndarray, write_children: bool):
+        _guard("dispatch")
         bits, pc, tau, n_words, fused, _owned = state
         bucket = int(padded_pairs.shape[0])
         key = (
@@ -322,6 +379,7 @@ class DevicePlacement:
         return jnp.asarray(bits)
 
     def coverage_dispatch(self, state, padded_sets, padded_weights):
+        _guard("coverage")
         from ..kernels.coverage import ops as _cov
 
         n_words = int(state.shape[1])
@@ -366,6 +424,7 @@ class DevicePlacement:
         }
 
     def frontier_dispatch(self, state, lo: int, hi: int, n_pairs: int):
+        _guard("frontier")
         from ..kernels.frontier import ops as _fops
 
         row_bucket, bucket = _fops.gen_buckets(hi - lo, n_pairs)
@@ -528,6 +587,7 @@ class MeshPlacement:
         return padded_m
 
     def dispatch(self, state, padded_pairs, write_children: bool):
+        _guard("dispatch")
         bits, pc, pc_dev, tau, fused, _owned = state
         device_pairs = isinstance(padded_pairs, jax.Array)
         pairs_j = jax.device_put(jnp.asarray(padded_pairs), self._pairs_sharding)
@@ -567,6 +627,7 @@ class MeshPlacement:
         return self.put_bits(bits)
 
     def coverage_dispatch(self, state, padded_sets, padded_weights):
+        _guard("coverage")
         from ..kernels.coverage import ops as _cov
         from . import sharded as _sh
 
@@ -607,6 +668,7 @@ class MeshPlacement:
         }
 
     def frontier_dispatch(self, state, lo: int, hi: int, n_pairs: int):
+        _guard("frontier")
         from ..kernels.frontier import ops as _fops
         from ..kernels.frontier.frontier import pack_params
         from . import sharded as _sh

@@ -135,7 +135,11 @@ class CheckpointManager:
     def steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.directory):
-            if name.startswith("ckpt_") and not name.endswith(".tmp"):
+            if (
+                name.startswith("ckpt_")
+                and not name.endswith(".tmp")
+                and not name.endswith(".corrupt")
+            ):
                 if os.path.exists(os.path.join(self.directory, name, "manifest.json")):
                     out.append(int(name.split("_")[1]))
         return sorted(out)
@@ -166,12 +170,32 @@ class CheckpointManager:
             self._pending = None
 
     def restore(self, step: int | None = None):
+        """Load a checkpoint. With an explicit ``step``, corruption raises.
+        With ``step=None`` (latest), a corrupt/truncated newest checkpoint is
+        quarantined (renamed ``*.corrupt``) and restore falls back to the
+        next older intact one — a crash mid-write of a non-atomic filesystem,
+        or a torn disk, costs one checkpoint interval, never the run."""
         self.wait()
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            return None, None
-        return load_pytree(self._step_dir(step))
+        if step is not None:
+            return load_pytree(self._step_dir(step))
+        for s in reversed(self.steps()):
+            path = self._step_dir(s)
+            try:
+                return load_pytree(path)
+            except Exception:
+                quarantine = path + ".corrupt"
+                shutil.rmtree(quarantine, ignore_errors=True)
+                try:
+                    os.rename(path, quarantine)
+                except OSError:
+                    shutil.rmtree(path, ignore_errors=True)
+        return None, None
+
+    def destroy(self) -> None:
+        """Remove the whole checkpoint directory (e.g. a completed mining
+        job whose resume states are no longer needed)."""
+        self.wait()
+        shutil.rmtree(self.directory, ignore_errors=True)
 
     def _prune(self) -> None:
         steps = self.steps()

@@ -17,12 +17,25 @@ Endpoints (JSON in / JSON out):
   GET  /risk?tau=1&kmax=3&top=10                        -> per-record risk profile
   GET  /anonymize?tau=1&kmax=3                          -> verified masking plan
   GET  /stats                                           -> store/placement/cache/http stats,
-                                                           unified executables section, last_mine
-                                                           per-level host/device timing split
+                                                           durability/resilience sections,
+                                                           unified executables, last_mine timing
   GET  /healthz                                         -> liveness (never gated)
+  GET  /readyz                                          -> readiness: 503 while recovering
+                                                           (WAL replay / job resume) or while
+                                                           the device circuit breaker is open
+  POST /cancel   {"tau": 1, "kmax": 3}                  -> cancel in-flight matching runs
 
 ``source`` in the /mine response is "cold", "incremental" or "cache" — the
-CI smoke job asserts a repeated query comes back "cache".
+CI smoke job asserts a repeated query comes back "cache". A ``deadline_s``
+on /mine bounds the request: an exceeded deadline returns ``499`` with the
+partial result mined so far (``"source": "partial"``).
+
+Durability (``--wal-dir DIR``): appends are WAL-logged and fsync'd before
+itemization, snapshots fold the log every ``--snapshot-every`` appends, and
+a restarted server recovers the store to the exact pre-crash version (and
+resumes interrupted mine jobs from their last checkpointed level). SIGTERM
+drains in-flight requests (bounded by ``--drain-timeout``), snapshots the
+store, and exits 0.
 
 Hardening (ROADMAP "authn and backpressure"):
 
@@ -40,13 +53,20 @@ import argparse
 import hmac
 import json
 import os
+import signal
+import sys
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
 
 import numpy as np
 
-from ..service import IncrementalConfig, MiningService
+from ..service import (
+    DeadlineExceeded,
+    IncrementalConfig,
+    MiningService,
+    NotReadyError,
+)
 
 __all__ = ["make_server", "main"]
 
@@ -106,6 +126,10 @@ class MinerHandler(BaseHTTPRequestHandler):
         if route == "/healthz":  # liveness: never auth-gated, never queued
             self._send(200, {"ok": True})
             return
+        if route == "/readyz":  # readiness: also probe-exempt, but honest
+            ready, reason = self.service.readiness()
+            self._send(200 if ready else 503, {"ready": ready, "reason": reason})
+            return
         if not self._authorized():
             self._count("unauthorized")
             self._send(401, {"error": "missing or invalid bearer token"})
@@ -139,11 +163,29 @@ class MinerHandler(BaseHTTPRequestHandler):
             self._send(200, self.service.append(rows))
         elif route == "/mine":
             max_itemsets = payload.get("max_itemsets")
-            resp = self.service.mine(**_mine_params(payload))
+            deadline_s = payload.get("deadline_s")
+            resp = self.service.mine(
+                **_mine_params(payload),
+                deadline_s=float(deadline_s) if deadline_s is not None else None,
+            )
+            # 499 (client-timeout convention): the run stopped at a batch
+            # boundary; the body still carries the valid partial answer
+            code = 499 if resp.source == "partial" else 200
+            if code == 499:
+                self._count("deadline_exceeded")
             self._send(
-                200,
+                code,
                 resp.to_json(
                     max_itemsets=int(max_itemsets) if max_itemsets is not None else None
+                ),
+            )
+        elif route == "/cancel":
+            self._send(
+                200,
+                self.service.cancel(
+                    int(payload.get("tau", 1)),
+                    int(payload.get("kmax", 3)),
+                    str(payload.get("ordering", "ascending")),
                 ),
             )
         elif route == "/report":
@@ -163,17 +205,29 @@ class MinerHandler(BaseHTTPRequestHandler):
         else:
             self._send(404, {"error": f"unknown route {route}"})
 
-    def do_GET(self):  # noqa: N802
+    def _run(self, payload: dict) -> None:
         try:
-            self._handle(self._query())
+            self._handle(payload)
+        except NotReadyError as e:
+            self._send(503, {"error": str(e), "retry": True})
+        except DeadlineExceeded as e:
+            # a coalesced waiter timed out; the shared run keeps going for
+            # the waiters that imposed no deadline
+            self._count("deadline_exceeded")
+            self._send(499, {"error": str(e)})
         except Exception as e:  # service must survive bad requests
             self._send(500, {"error": f"{type(e).__name__}: {e}"})
 
+    def do_GET(self):  # noqa: N802
+        self._run(self._query())
+
     def do_POST(self):  # noqa: N802
         try:
-            self._handle(self._body())
+            payload = self._body()
         except Exception as e:
-            self._send(500, {"error": f"{type(e).__name__}: {e}"})
+            self._send(400, {"error": f"{type(e).__name__}: {e}"})
+            return
+        self._run(payload)
 
 
 def make_server(
@@ -213,6 +267,17 @@ def main() -> None:
                     help="serve from a word-sharded mesh store, e.g. '2x4' "
                          "(pair shards x word shards over the visible devices)")
     ap.add_argument("--cache-capacity", type=int, default=64)
+    ap.add_argument("--cache-max-bytes", type=int, default=None,
+                    help="bound the result cache by payload bytes, not just "
+                         "entry count")
+    ap.add_argument("--wal-dir", default=None,
+                    help="durability directory (write-ahead log + snapshots); "
+                         "a restarted server recovers the store from it")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="fold the WAL into a snapshot every N appends")
+    ap.add_argument("--drain-timeout", type=float, default=10.0,
+                    help="seconds SIGTERM waits for in-flight requests before "
+                         "cancelling them")
     ap.add_argument("--max-delta-fraction", type=float, default=0.25)
     ap.add_argument("--compact-threshold", type=int, default=None,
                     help="auto-compact the store when this many append "
@@ -245,7 +310,10 @@ def main() -> None:
         engine=args.engine,
         placement=placement,
         cache_capacity=args.cache_capacity,
+        cache_max_bytes=args.cache_max_bytes,
         compact_threshold=args.compact_threshold,
+        wal_dir=args.wal_dir,
+        snapshot_every=args.snapshot_every,
         incremental=IncrementalConfig(max_delta_fraction=args.max_delta_fraction),
     )
     if args.preload == "randomized":
@@ -276,16 +344,43 @@ def main() -> None:
         f"rows={store.n_rows if store else 0}, "
         f"items={store.n_items if store else 0}, "
         f"auth={'on' if args.auth_token else 'off'}, "
-        f"max_inflight={args.max_inflight or 'unbounded'})",
+        f"max_inflight={args.max_inflight or 'unbounded'}, "
+        f"wal={args.wal_dir or 'off'})",
         flush=True,
     )
+
+    # graceful shutdown: the server loop runs in a thread; the main thread
+    # waits on the signal, stops accepting, drains in-flight work (bounded),
+    # snapshots the durable store, and exits 0 so supervisors see a clean stop
+    stop = threading.Event()
+
+    def _on_signal(signum, frame):
+        stop.set()
+
+    signal.signal(signal.SIGTERM, _on_signal)
+    signal.signal(signal.SIGINT, _on_signal)
+
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
     try:
-        server.serve_forever()
+        while not stop.wait(0.2):
+            pass
     except KeyboardInterrupt:
         pass
-    finally:
-        server.server_close()
-        service.close()
+    print("serve_miner draining...", flush=True)
+    server.shutdown()
+    thread.join()
+    drain = service.drain(args.drain_timeout)
+    snapshot = service.snapshot_store()
+    server.server_close()
+    service.close()
+    print(
+        f"serve_miner stopped (drained={drain['drained']}, "
+        f"abandoned={drain['abandoned']}, "
+        f"snapshot={'v%d' % snapshot if snapshot is not None else 'none'})",
+        flush=True,
+    )
+    sys.exit(0)
 
 
 if __name__ == "__main__":

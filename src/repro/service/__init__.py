@@ -8,23 +8,40 @@ row-block appends, ``mine_incremental`` exploits support monotonicity to
 re-answer after appends at delta cost, ``ResultCache``/``RequestScheduler``
 make repeat and concurrent traffic cheap, and ``MiningService`` is the
 facade the HTTP endpoint (``repro.launch.serve_miner``) exposes.
+
+The durability layer (``wal.DurableStore``) makes the store survive process
+death, ``resilience`` degrades device failures to the host placement behind
+a circuit breaker, and ``faults`` is the chaos-test injection harness.
 """
 
-from .api import MineResponse, MiningService
+from .api import DeadlineExceeded, MineResponse, MiningService, NotReadyError
 from .cache import CacheEntry, ResultCache, make_key
+from .faults import DeviceFault, FaultInjector, KillPoint, placement_faults
 from .incremental import IncrementalConfig, delta_support, mine_incremental
+from .resilience import CircuitBreaker, ResilienceConfig
 from .scheduler import RequestScheduler
 from .store import DatasetStore
+from .wal import DurableStore, WriteAheadLog
 
 __all__ = [
     "CacheEntry",
+    "CircuitBreaker",
     "DatasetStore",
+    "DeadlineExceeded",
+    "DeviceFault",
+    "DurableStore",
+    "FaultInjector",
     "IncrementalConfig",
+    "KillPoint",
     "MineResponse",
     "MiningService",
+    "NotReadyError",
     "RequestScheduler",
+    "ResilienceConfig",
     "ResultCache",
+    "WriteAheadLog",
     "delta_support",
     "make_key",
     "mine_incremental",
+    "placement_faults",
 ]

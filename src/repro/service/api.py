@@ -25,27 +25,50 @@ process-wide executable buckets (``kernels.intersect.ops.EXEC_CACHE``).
 from __future__ import annotations
 
 import dataclasses
+import os
+import pickle
 import threading
 import time
 from collections import OrderedDict
+from concurrent.futures import TimeoutError as FutureTimeoutError
 
 import numpy as np
 
 from ..core.items import ItemTable
-from ..core.kyiv import KyivConfig, MiningResult, mine_preprocessed
-from ..core.placement import resolve_placement
+from ..core.kyiv import KyivConfig, MiningResult, RunControl, mine_preprocessed
+from ..core.placement import HostPlacement, is_device_failure, resolve_placement
 from ..core.preprocess import preprocess
 from ..core import exec_cache
+from ..distributed.checkpoint import CheckpointManager
 from ..kernels.intersect import LevelPipeline
 from ..sdc.quasi import QuasiIdentifierReport, report_as_dict
 from .cache import CacheEntry, ResultCache, make_key
+from .faults import NULL_INJECTOR
 from .incremental import IncrementalConfig, mine_incremental
+from .resilience import CircuitBreaker, ResilienceConfig
 from .scheduler import RequestScheduler
 from .store import DatasetStore
+from .wal import DurableStore
 
-__all__ = ["MineResponse", "MiningService"]
+__all__ = [
+    "MineResponse",
+    "MiningService",
+    "NotReadyError",
+    "DeadlineExceeded",
+]
 
 _PREP_CACHE_CAPACITY = 8
+
+
+class NotReadyError(RuntimeError):
+    """The service is still recovering (WAL replay / job resume) — liveness
+    is fine, readiness is not; HTTP maps this to 503."""
+
+
+class DeadlineExceeded(TimeoutError):
+    """A coalesced waiter's deadline expired before the shared run finished.
+    The run itself keeps going for waiters without a deadline; HTTP maps
+    this to 499."""
 
 
 class _LruCache:
@@ -138,10 +161,18 @@ class MiningService:
         incremental: IncrementalConfig | None = None,
         placement=None,
         cache_capacity: int = 64,
+        cache_max_bytes: int | None = None,
         max_workers: int = 1,
         word_tile: int = 8,
         compact_threshold: int | None = None,
         keep_versions: int = 8,
+        wal_dir: str | None = None,
+        snapshot_every: int = 8,
+        job_checkpoint_levels: int = 1,
+        deadline_grace_s: float = 2.0,
+        fault_injector=None,
+        resilience: ResilienceConfig | None = None,
+        defer_recovery: bool = False,
         **config_kw,
     ):
         self.config = config or KyivConfig(**config_kw)
@@ -159,15 +190,45 @@ class MiningService:
             compact_threshold=compact_threshold,
             keep_versions=keep_versions,
         )
-        self._store: DatasetStore | None = (
-            DatasetStore(n_cols, **self._store_kw) if n_cols else None
+        self.injector = fault_injector or NULL_INJECTOR
+        self.resilience = resilience or ResilienceConfig()
+        self.breaker = CircuitBreaker(
+            self.resilience.failure_threshold, self.resilience.cooldown_s
         )
-        self.cache = ResultCache(cache_capacity)
+        self.wal_dir = wal_dir
+        self.job_checkpoint_levels = max(1, int(job_checkpoint_levels))
+        self.deadline_grace_s = deadline_grace_s
+        self._durable: DurableStore | None = (
+            DurableStore(
+                wal_dir,
+                snapshot_every=snapshot_every,
+                injector=self.injector,
+                **self._store_kw,
+            )
+            if wal_dir is not None
+            else None
+        )
+        self._store: DatasetStore | None = (
+            DatasetStore(n_cols, **self._store_kw)
+            if n_cols and self._durable is None
+            else None
+        )
+        self.cache = ResultCache(cache_capacity, max_bytes=cache_max_bytes)
         self.scheduler = RequestScheduler(max_workers=max_workers)
         self._preps: "OrderedDict[tuple, object]" = OrderedDict()
         self._privacy = _LruCache()
         self._last_mine_timing: dict | None = None
         self._lock = threading.Lock()
+        self._ready = threading.Event()
+        self._controls: dict[tuple, RunControl] = {}
+        self._recovery_info: dict | None = None
+        self._drain_info: dict | None = None
+        self.served = 0
+        self.device_retries = 0
+        self.degraded_mines = 0
+        self.resumed_jobs = 0
+        if not defer_recovery:
+            self.recover()
 
     @classmethod
     def from_dataset(cls, dataset: np.ndarray, **kw) -> "MiningService":
@@ -175,6 +236,40 @@ class MiningService:
         service = cls(dataset.shape[1], **kw)
         service.append(dataset)
         return service
+
+    # -- readiness / recovery ------------------------------------------------
+
+    @property
+    def ready(self) -> bool:
+        return self._ready.is_set()
+
+    def readiness(self) -> tuple[bool, str]:
+        """(ready, reason). Not ready while recovering, and while the
+        circuit breaker is open (the service still *answers*, degraded to
+        host — but load balancers should prefer healthy replicas)."""
+        if not self._ready.is_set():
+            return False, "recovering"
+        if self.breaker.state == "open":
+            return False, "circuit_breaker_open"
+        return True, "ok"
+
+    def _require_ready(self) -> None:
+        if not self._ready.is_set():
+            raise NotReadyError("service is recovering — retry shortly")
+
+    def recover(self) -> dict | None:
+        """Replay durability state (WAL + snapshots), resume interrupted
+        mine jobs, then flip ready. Without a ``wal_dir`` this just marks
+        the service ready."""
+        info = None
+        if self._durable is not None:
+            info = self._durable.recover()
+            with self._lock:
+                self._store = self._durable.store
+            info["resumed_jobs"] = self._resume_jobs()
+            self._recovery_info = info
+        self._ready.set()
+        return info
 
     # -- store --------------------------------------------------------------
 
@@ -185,13 +280,19 @@ class MiningService:
         return self._store
 
     def append(self, rows: np.ndarray) -> dict:
+        self._require_ready()
         rows = np.asarray(rows)
         if rows.ndim == 1:
             rows = rows[None, :]
-        with self._lock:
-            if self._store is None:
-                self._store = DatasetStore(rows.shape[1], **self._store_kw)
-        version = self.store.append(rows)
+        if self._durable is not None:
+            version = self._durable.append(rows)
+            with self._lock:
+                self._store = self._durable.store
+        else:
+            with self._lock:
+                if self._store is None:
+                    self._store = DatasetStore(rows.shape[1], **self._store_kw)
+            version = self.store.append(rows)
         return {
             "version": version,
             "appended": int(rows.shape[0]),
@@ -253,7 +354,136 @@ class MiningService:
 
         return factory
 
-    def _compute(self, key: tuple, table: ItemTable) -> CacheEntry:
+    # -- resumable jobs ------------------------------------------------------
+
+    def _job_manager(self, key: tuple) -> CheckpointManager | None:
+        """Per-(version, tau, kmax, ordering) mid-run checkpoint manager —
+        only when the service is durable (a crash-only concern)."""
+        if self._durable is None:
+            return None
+        version, tau, kmax, ordering = key
+        name = f"v{version}_t{tau}_k{kmax}_{ordering}"
+        return CheckpointManager(
+            os.path.join(self.wal_dir, "jobs", name), keep=2
+        )
+
+    def _resume_jobs(self) -> int:
+        """Re-issue mine runs that had level checkpoints when the process
+        died. Jobs at a stale store version are dropped (their answer is no
+        longer the current-version answer anyone will ask for)."""
+        jobs_root = os.path.join(self.wal_dir, "jobs")
+        if not os.path.isdir(jobs_root):
+            return 0
+        resumed = 0
+        current = self._store.version if self._store is not None else 0
+        for name in sorted(os.listdir(jobs_root)):
+            try:
+                vs, ts, ks, ordering = name.split("_", 3)
+                version, tau, kmax = int(vs[1:]), int(ts[1:]), int(ks[1:])
+            except (ValueError, IndexError):
+                continue
+            mgr = CheckpointManager(os.path.join(jobs_root, name), keep=2)
+            if version != current or mgr.latest_step() is None:
+                mgr.destroy()
+                continue
+            snap_version, table = self.store.snapshot()
+            if snap_version != version:
+                mgr.destroy()
+                continue
+            key = make_key(version, tau, kmax, ordering)
+            self.scheduler.submit(key, lambda k=key, t=table: self._compute(k, t))
+            resumed += 1
+        self.resumed_jobs += resumed
+        return resumed
+
+    def _mine_cold(
+        self,
+        key: tuple,
+        table: ItemTable,
+        config: KyivConfig,
+        control: RunControl | None,
+    ) -> tuple[MiningResult, dict]:
+        """Cold mine with device retries, circuit-breaker degradation to the
+        host placement, and (when durable) level checkpoints for resume."""
+        version, tau, kmax, ordering = key
+        prep = self._prep_for(version, table, config)
+        info: dict = {"n_rows": table.n_rows, "n_items": table.n_items}
+
+        mgr = self._job_manager(key)
+        on_level_end = None
+        resume_state = None
+        if mgr is not None:
+            state_tree, _meta = mgr.restore()
+            if state_tree is not None:
+                resume_state = pickle.loads(
+                    np.asarray(state_tree["state"], dtype=np.uint8).tobytes()
+                )
+                info["resumed_from_level"] = int(resume_state.next_k)
+
+            def on_level_end(level, state, _mgr=mgr):
+                if level % self.job_checkpoint_levels == 0:
+                    blob = pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL)
+                    _mgr.save(
+                        level,
+                        {"state": np.frombuffer(blob, dtype=np.uint8)},
+                        blocking=True,
+                    )
+                # the kill-mid-mine seam fires *after* the save — simulated
+                # death leaves the checkpoint the restart resumes from
+                self.injector.check("mine.level_end")
+
+        def run(cfg, factory):
+            return mine_preprocessed(
+                prep,
+                cfg,
+                pipeline_factory=factory,
+                on_level_end=on_level_end,
+                resume_state=resume_state,
+                control=control,
+            )
+
+        result: MiningResult | None = None
+        if self.placement.kind != "host" and self.breaker.allow():
+            delay = self.resilience.backoff_s
+            attempt = 0
+            while True:
+                try:
+                    result = run(
+                        config, self._warm_pipeline_factory(version, prep, config)
+                    )
+                    self.breaker.record_success()
+                    break
+                except Exception as exc:
+                    if not is_device_failure(exc):
+                        raise
+                    self.breaker.record_failure()
+                    attempt += 1
+                    if attempt > self.resilience.max_retries or not self.breaker.allow():
+                        info["device_error"] = f"{type(exc).__name__}: {exc}"
+                        break
+                    self.device_retries += 1
+                    self.resilience.sleep(delay)
+                    delay *= 2
+
+        if result is None:
+            # degraded (or plain host) path: same answer, host placement
+            host_config = dataclasses.replace(
+                config, placement=HostPlacement(), engine="numpy"
+            )
+            result = run(host_config, None)
+            if self.placement.kind != "host":
+                self.degraded_mines += 1
+                info["degraded"] = "host"
+
+        if mgr is not None:
+            # run finished (complete or deliberately interrupted) — resume
+            # state is only for crashes, which never reach this line
+            mgr.destroy()
+        return result, info
+
+    def _compute(
+        self, key: tuple, table: ItemTable, control: RunControl | None = None
+    ) -> CacheEntry:
         # a coalesced predecessor may have finished between the caller's
         # cache miss and this run being scheduled
         entry = self.cache.get(key)
@@ -261,62 +491,95 @@ class MiningService:
             return entry
         version, tau, kmax, ordering = key
         config = self._request_config(tau, kmax, ordering)
-
-        base = self.cache.latest_base(tau, kmax, ordering, version)
-        if base is not None:
-            inc = mine_incremental(
-                self.store,
-                base.result,
-                base.version,
-                config,
-                self.incremental,
-                table=table,
-                # seed expansion runs through this service's placement, over
-                # the store's resident bitsets (None -> falls back to a host
-                # snapshot gather; bit-identical either way). Host placements
-                # skip the resident copy entirely — _expand_seeds would never
-                # read it, and put_bits would duplicate the whole matrix.
-                placement=self.placement,
-                resident_bits=(
-                    self.store.device_bits(version)
-                    if self.placement.kind != "host" and self.incremental.enabled
-                    else None
-                ),
+        if control is not None:
+            with self._lock:
+                self._controls[key] = control
+        try:
+            # the incremental path dispatches through the device placement;
+            # with the breaker open it would fail the same way the cold path
+            # just did, so skip straight to the (degradable) cold path
+            base = (
+                self.cache.latest_base(tau, kmax, ordering, version)
+                if self.placement.kind == "host" or self.breaker.allow()
+                else None
             )
-            if inc is not None:
-                result, info = inc
-                entry = CacheEntry(key=key, result=result, source="incremental", info=info)
-                self.cache.put(entry)
-                return entry
+            if base is not None:
+                try:
+                    inc = mine_incremental(
+                        self.store,
+                        base.result,
+                        base.version,
+                        config,
+                        self.incremental,
+                        table=table,
+                        # seed expansion runs through this service's placement,
+                        # over the store's resident bitsets (None -> falls back
+                        # to a host snapshot gather; bit-identical either way).
+                        # Host placements skip the resident copy entirely.
+                        placement=self.placement,
+                        resident_bits=(
+                            self.store.device_bits(version)
+                            if self.placement.kind != "host"
+                            and self.incremental.enabled
+                            else None
+                        ),
+                    )
+                except Exception as exc:
+                    if not is_device_failure(exc):
+                        raise
+                    self.breaker.record_failure()
+                    inc = None
+                if inc is not None:
+                    result, info = inc
+                    entry = CacheEntry(
+                        key=key, result=result, source="incremental", info=info
+                    )
+                    self.cache.put(entry)
+                    return entry
 
-        prep = self._prep_for(version, table, config)
-        result = mine_preprocessed(
-            prep, config, pipeline_factory=self._warm_pipeline_factory(version, prep, config)
-        )
-        # per-level host-busy vs device-busy split of the last cold run —
-        # the /stats view of what the device frontier buys per level
-        self._last_mine_timing = {
-            "version": version,
-            "tau": tau,
-            "kmax": kmax,
-            "wall_time": result.wall_time,
-            "levels": result.timing_breakdown(),
-        }
-        entry = CacheEntry(
-            key=key,
-            result=result,
-            source="cold",
-            info={"n_rows": table.n_rows, "n_items": table.n_items},
-        )
-        self.cache.put(entry)
-        return entry
+            result, info = self._mine_cold(key, table, config, control)
+            # per-level host-busy vs device-busy split of the last cold run —
+            # the /stats view of what the device frontier buys per level
+            self._last_mine_timing = {
+                "version": version,
+                "tau": tau,
+                "kmax": kmax,
+                "wall_time": result.wall_time,
+                "levels": result.timing_breakdown(),
+            }
+            if not result.completed:
+                # valid-but-incomplete answer: hand it to this run's waiters,
+                # never cache it and never let the incremental miner build on it
+                info["interrupted"] = result.interrupted
+                return CacheEntry(key=key, result=result, source="partial", info=info)
+            entry = CacheEntry(key=key, result=result, source="cold", info=info)
+            self.cache.put(entry)
+            return entry
+        finally:
+            if control is not None:
+                with self._lock:
+                    self._controls.pop(key, None)
+
+    def cancel(self, tau: int, kmax: int, ordering: str = "ascending") -> dict:
+        """Cancel in-flight runs matching ``(tau, kmax, ordering)`` at any
+        version. The run stops at its next batch boundary and its waiters
+        receive the partial result."""
+        cancelled = 0
+        with self._lock:
+            for key, ctrl in self._controls.items():
+                if key[1:] == (int(tau), int(kmax), str(ordering)):
+                    ctrl.cancel()
+                    cancelled += 1
+        return {"cancelled": cancelled}
 
     def mine(
         self,
         tau: int = 1,
         kmax: int = 3,
         ordering: str = "ascending",
+        deadline_s: float | None = None,
     ) -> MineResponse:
+        self._require_ready()
         t0 = time.perf_counter()
         # warm path first: a version read + dict lookup, no snapshot copy
         version = self.store.version
@@ -328,10 +591,31 @@ class MiningService:
             # (its version may have advanced past the first read — re-key)
             version, table = self.store.snapshot()
             key = make_key(version, tau, kmax, ordering)
-            entry = self.scheduler.submit(
-                key, lambda: self._compute(key, table)
-            ).result()
+            control = (
+                RunControl.with_timeout(deadline_s)
+                if deadline_s is not None
+                else RunControl()
+            )
+            future = self.scheduler.submit(
+                key, lambda: self._compute(key, table, control)
+            )
+            if deadline_s is None:
+                entry = future.result()
+            else:
+                # if this request coalesced onto an earlier run, that run's
+                # control (not ours) governs it — bound the wait instead:
+                # the run stops within one batch of *its* deadline, and a
+                # deadline-free run releases us here with DeadlineExceeded
+                try:
+                    entry = future.result(
+                        timeout=deadline_s + self.deadline_grace_s
+                    )
+                except FutureTimeoutError:
+                    raise DeadlineExceeded(
+                        f"mine(tau={tau}, kmax={kmax}) exceeded {deadline_s}s"
+                    ) from None
             source = entry.source
+        self.served += 1
         return MineResponse(
             version=version,
             tau=tau,
@@ -445,7 +729,28 @@ class MiningService:
 
     def stats(self) -> dict:
         store = self._store
+        ready, reason = self.readiness()
         return {
+            "ready": ready,
+            "ready_reason": reason,
+            "served": self.served,
+            "durability": (
+                dict(
+                    self._durable.stats(),
+                    last_recovery=self._recovery_info,
+                    job_checkpoint_levels=self.job_checkpoint_levels,
+                    resumed_jobs=self.resumed_jobs,
+                )
+                if self._durable is not None
+                else None
+            ),
+            "resilience": dict(
+                self.breaker.stats(),
+                device_retries=self.device_retries,
+                degraded_mines=self.degraded_mines,
+                max_retries=self.resilience.max_retries,
+            ),
+            "drain": self._drain_info,
             "store": {
                 "version": store.version if store else 0,
                 "n_rows": store.n_rows if store else 0,
@@ -470,8 +775,39 @@ class MiningService:
 
     def compact(self, keep_versions: int | None = None) -> dict:
         """Manually coalesce the store's append blocks (see
-        :meth:`DatasetStore.compact`)."""
-        return self.store.compact(keep_versions)
+        :meth:`DatasetStore.compact`). On a durable service the compacted
+        state is snapshotted immediately — compaction is not WAL-logged, so
+        folding it into a snapshot (which also resets the WAL) is what keeps
+        recovery consistent."""
+        out = self.store.compact(keep_versions)
+        if self._durable is not None:
+            self._durable.snapshot()
+        return out
+
+    def snapshot_store(self) -> int | None:
+        """Force a durable snapshot (graceful shutdown calls this so restart
+        recovery is a snapshot load, not a WAL replay)."""
+        if self._durable is None:
+            return None
+        return self._durable.snapshot()
+
+    def drain(self, timeout: float | None = None) -> dict:
+        """Graceful-shutdown drain: wait for in-flight runs up to
+        ``timeout``, then cancel stragglers (they stop at their next batch
+        boundary and their waiters get partial results) and give them a
+        short grace to unwind."""
+        info = self.scheduler.drain(timeout)
+        with self._lock:
+            stragglers = list(self._controls.values())
+        for ctrl in stragglers:
+            ctrl.cancel()
+        if info["abandoned"]:
+            grace = self.scheduler.drain(min(2.0, timeout if timeout else 2.0))
+            info["drained_after_cancel"] = grace["drained"]
+        self._drain_info = info
+        return info
 
     def close(self) -> None:
         self.scheduler.shutdown()
+        if self._durable is not None:
+            self._durable.close()

@@ -36,7 +36,7 @@ def make_key(version: int, tau: int, kmax: int, ordering: str) -> CacheKey:
 class CacheEntry:
     key: CacheKey
     result: MiningResult
-    source: str  # "cold" | "incremental"
+    source: str  # "cold" | "incremental" | "partial"
     info: dict
     created_at: float = dataclasses.field(default_factory=time.time)
     hits: int = 0
@@ -45,15 +45,41 @@ class CacheEntry:
     def version(self) -> int:
         return self.key[0]
 
+    def nbytes(self) -> int:
+        """Approximate payload footprint for byte-bounded eviction.
+
+        Counts the itemset lists plus any prep arrays the entry's info
+        references (``l_bits`` / table bits). Shared preps across entries
+        are counted once per entry — deliberately conservative: the bound
+        overestimates, never undercounts."""
+        if self.result is None:
+            return 0
+        total = 0
+        for ids, _cnt in self.result.itemsets:
+            total += 16 + 8 * len(ids)
+        prep = getattr(self.result, "prep", None)
+        arr = getattr(prep, "l_bits", None)
+        if arr is not None and hasattr(arr, "nbytes"):
+            total += int(arr.nbytes)
+        bits = getattr(getattr(prep, "table", None), "bits", None)
+        if bits is not None and hasattr(bits, "nbytes"):
+            total += int(bits.nbytes)
+        return total
+
 
 class ResultCache:
     """Thread-safe LRU over mining results."""
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, max_bytes: int | None = None):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
+        if max_bytes is not None and max_bytes <= 0:
+            raise ValueError(f"max_bytes must be positive, got {max_bytes}")
         self.capacity = capacity
+        self.max_bytes = max_bytes
         self._entries: "OrderedDict[CacheKey, CacheEntry]" = OrderedDict()
+        self._bytes: dict[CacheKey, int] = {}
+        self._total_bytes = 0
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -70,11 +96,28 @@ class ResultCache:
             return entry
 
     def put(self, entry: CacheEntry) -> None:
+        nbytes = entry.nbytes()
         with self._lock:
+            if entry.key in self._bytes:
+                self._total_bytes -= self._bytes[entry.key]
             self._entries[entry.key] = entry
+            self._bytes[entry.key] = nbytes
+            self._total_bytes += nbytes
             self._entries.move_to_end(entry.key)
-            while len(self._entries) > self.capacity:
-                self._entries.popitem(last=False)
+            self._evict_locked()
+
+    def _evict_locked(self) -> None:
+        # evict LRU-first while over either bound, but never the entry just
+        # touched — a single oversized result still gets cached (the bound
+        # is a budget for the tail, not a hard admission gate)
+        def over() -> bool:
+            if len(self._entries) > self.capacity:
+                return True
+            return self.max_bytes is not None and self._total_bytes > self.max_bytes
+
+        while len(self._entries) > 1 and over():
+            key, _ = self._entries.popitem(last=False)
+            self._total_bytes -= self._bytes.pop(key, 0)
 
     def latest_base(
         self, tau: int, kmax: int, ordering: str, before_version: int
@@ -99,6 +142,8 @@ class ResultCache:
             return {
                 "entries": len(self._entries),
                 "capacity": self.capacity,
+                "bytes": self._total_bytes,
+                "max_bytes": self.max_bytes,
                 "hits": self.hits,
                 "misses": self.misses,
             }
@@ -106,5 +151,7 @@ class ResultCache:
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self._bytes.clear()
+            self._total_bytes = 0
             self.hits = 0
             self.misses = 0

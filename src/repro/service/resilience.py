@@ -1,0 +1,94 @@
+"""Retry/degradation policy for device-backed mining.
+
+When a device or mesh dispatch fails with an accelerator-shaped error
+(:func:`repro.core.placement.is_device_failure`), the service retries with
+exponential backoff; once failures persist the :class:`CircuitBreaker`
+opens and requests are served from the Host placement instead — slower but
+bit-identical results (the placements share one reference semantics, see
+``tests/test_placement.py``). After ``cooldown_s`` the breaker lets one
+request probe the device path again (implicit half-open): success closes
+it, failure re-opens and restarts the cooldown.
+
+Everything time-/sleep-shaped is injectable so chaos tests run in
+milliseconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable
+
+__all__ = ["ResilienceConfig", "CircuitBreaker"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Knobs for device-failure handling."""
+
+    max_retries: int = 2          # device attempts after the first failure
+    backoff_s: float = 0.05       # initial backoff; doubles per retry
+    failure_threshold: int = 3    # consecutive failures that open the breaker
+    cooldown_s: float = 30.0      # open duration before a probe is allowed
+    sleep: Callable[[float], None] = time.sleep
+
+
+class CircuitBreaker:
+    """Consecutive-failure breaker with implicit half-open probing."""
+
+    def __init__(self, failure_threshold: int = 3, cooldown_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.failure_threshold = max(1, failure_threshold)
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._failures = 0
+        self._opened_at: float | None = None
+        self.trips = 0
+
+    @property
+    def state(self) -> str:
+        with self._lock:
+            if self._opened_at is None:
+                return "closed"
+            if self._clock() - self._opened_at >= self.cooldown_s:
+                return "half_open"
+            return "open"
+
+    def allow(self) -> bool:
+        """May the device path be attempted right now?"""
+        return self.state != "open"
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._failures = 0
+            self._opened_at = None
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self._failures += 1
+            if self._failures >= self.failure_threshold:
+                if self._opened_at is None:
+                    self.trips += 1
+                self._opened_at = self._clock()
+
+    def stats(self) -> dict:
+        with self._lock:
+            opened = self._opened_at
+            state = (
+                "closed"
+                if opened is None
+                else (
+                    "half_open"
+                    if self._clock() - opened >= self.cooldown_s
+                    else "open"
+                )
+            )
+            return {
+                "state": state,
+                "consecutive_failures": self._failures,
+                "failure_threshold": self.failure_threshold,
+                "cooldown_s": self.cooldown_s,
+                "trips": self.trips,
+            }

@@ -16,7 +16,9 @@ distinct requests queue FIFO rather than thrash it.
 from __future__ import annotations
 
 import threading
-from concurrent.futures import Future, ThreadPoolExecutor
+import time
+from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeoutError
 from typing import Callable, TypeVar
 
 __all__ = ["RequestScheduler"]
@@ -33,6 +35,7 @@ class RequestScheduler:
         self._inflight: dict[tuple, Future] = {}
         self.scheduled = 0
         self.coalesced = 0
+        self.failed = 0
 
     def submit(self, key: tuple, fn: Callable[[], T]) -> "Future[T]":
         """Run ``fn`` for ``key``, or join the in-flight run for the same key."""
@@ -49,15 +52,48 @@ class RequestScheduler:
             with self._lock:
                 if self._inflight.get(key) is f:
                     del self._inflight[key]
+                try:
+                    failed = f.exception() is not None
+                except CancelledError:
+                    failed = True
+                if failed:
+                    # the exception is delivered to every coalesced waiter
+                    # via the shared future; here we only count it — a dead
+                    # worker run must never wedge the key for later requests
+                    self.failed += 1
 
         future.add_done_callback(_done)
         return future
+
+    def drain(self, timeout: float | None = None) -> dict:
+        """Wait for in-flight work to finish (graceful shutdown).
+
+        New submissions are still accepted during the drain — the HTTP
+        layer stops feeding the scheduler before calling this. Returns
+        counts of runs drained vs. abandoned at the deadline."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            pending = list(self._inflight.values())
+        drained = abandoned = 0
+        for fut in pending:
+            remaining = (
+                None if deadline is None else max(0.0, deadline - time.monotonic())
+            )
+            try:
+                fut.exception(timeout=remaining)
+                drained += 1
+            except FutureTimeoutError:
+                abandoned += 1
+            except (CancelledError, Exception):
+                drained += 1
+        return {"inflight": len(pending), "drained": drained, "abandoned": abandoned}
 
     def stats(self) -> dict:
         with self._lock:
             return {
                 "scheduled": self.scheduled,
                 "coalesced": self.coalesced,
+                "failed": self.failed,
                 "inflight": len(self._inflight),
             }
 

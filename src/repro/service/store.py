@@ -296,6 +296,91 @@ class DatasetStore:
         with self._lock:
             return version in self._watermarks
 
+    # -- durability (snapshot state for repro.service.wal) -------------------
+
+    def export_state(self) -> dict:
+        """Everything observable about the store as a flat pytree of arrays
+        and scalars — the payload a durable snapshot persists. Capacity
+        slack from amortised doubling is deliberately not captured (it is
+        not observable); ``from_state`` rebuilds snug arrays."""
+        with self._lock:
+            t, w = self._n_items, self._n_words
+            versions = sorted(self._watermarks)
+            return {
+                "n_cols": int(self.n_cols),
+                "word_tile": int(self.word_tile),
+                "n_rows": int(self.n_rows),
+                "version": int(self.version),
+                "n_items": int(t),
+                "n_words": int(w),
+                "compactions": int(self.compactions),
+                "value": self._value[:t].copy(),
+                "col": self._col[:t].copy(),
+                "freq": self._freq[:t].copy(),
+                "min_row": self._min_row[:t].copy(),
+                "bits": self._bits[:t, :w].copy(),
+                "wm_version": np.asarray(versions, dtype=np.int64),
+                "wm_rows": np.asarray(
+                    [self._watermarks[v][0] for v in versions], dtype=np.int64
+                ),
+                "wm_items": np.asarray(
+                    [self._watermarks[v][1] for v in versions], dtype=np.int64
+                ),
+            }
+
+    @classmethod
+    def from_state(
+        cls,
+        state: dict,
+        *,
+        placement=None,
+        compact_threshold: int | None = None,
+        keep_versions: int = 8,
+    ) -> "DatasetStore":
+        """Rebuild a store from :meth:`export_state` output. The recovered
+        store is observably identical: item ids, bitsets, supports,
+        version/watermarks — the recovery path of the durable service.
+
+        ``placement`` must be layout-compatible with the snapshot (its word
+        tile has to divide the snapshot's padded width); recovering a store
+        onto a placement with a coarser word tile raises rather than
+        silently re-pack bits."""
+        store = cls(
+            int(state["n_cols"]),
+            word_tile=int(state["word_tile"]),
+            placement=placement,
+            compact_threshold=compact_threshold,
+            keep_versions=keep_versions,
+        )
+        t, w = int(state["n_items"]), int(state["n_words"])
+        if w % store.word_tile != 0:
+            raise ValueError(
+                f"snapshot word width {w} is not a multiple of the "
+                f"placement-aligned word tile {store.word_tile} — the store "
+                "was snapshotted under an incompatible placement"
+            )
+        store._grow(max(t, 1), max(w, store.word_tile))
+        store._n_items = t
+        store._n_words = w
+        store.n_rows = int(state["n_rows"])
+        store.version = int(state["version"])
+        store.compactions = int(state["compactions"])
+        for name in ("value", "col", "freq", "min_row"):
+            getattr(store, f"_{name}")[:t] = np.asarray(state[name], dtype=np.int64)
+        store._bits[:t, :w] = np.asarray(state["bits"], dtype=np.uint32)
+        store._id_of = {
+            (int(store._col[i]), int(store._value[i])): i for i in range(t)
+        }
+        store._watermarks = {
+            int(v): (int(r), int(it))
+            for v, r, it in zip(
+                np.asarray(state["wm_version"]),
+                np.asarray(state["wm_rows"]),
+                np.asarray(state["wm_items"]),
+            )
+        }
+        return store
+
     # -- snapshots ----------------------------------------------------------
 
     def item_table(self, *, snapshot: bool = True) -> ItemTable:

@@ -532,3 +532,135 @@ def test_concurrent_http_requests_coalesce(http_service):
     cache = svc.cache.stats()
     assert sched["scheduled"] + sched["coalesced"] + cache["hits"] >= 6
     assert sum(1 for r in results if r["source"] == "cold") >= 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduler worker death + byte-bounded cache + readiness (robustness PR)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_worker_death_fails_only_that_key():
+    """A worker raising mid-job must deliver the exception to every waiter
+    coalesced on that key — and nothing else: the key is released and
+    subsequent requests (same or different key) run normally."""
+    sched = RequestScheduler(max_workers=1)
+    gate = threading.Event()
+
+    def dies():
+        gate.wait(5)
+        raise RuntimeError("worker died")
+
+    f1 = sched.submit(("k",), dies)
+    f2 = sched.submit(("k",), dies)  # coalesces onto the doomed run
+    assert f1 is f2
+    gate.set()
+    with pytest.raises(RuntimeError, match="worker died"):
+        f1.result(timeout=10)
+    with pytest.raises(RuntimeError, match="worker died"):
+        f2.result(timeout=10)
+    # the scheduler is not wedged: the same key runs again, fresh
+    assert sched.submit(("k",), lambda: 42).result(timeout=10) == 42
+    assert sched.submit(("other",), lambda: 7).result(timeout=10) == 7
+    stats = sched.stats()
+    assert stats["failed"] == 1 and stats["inflight"] == 0
+    assert stats["scheduled"] == 3 and stats["coalesced"] == 1
+    sched.shutdown()
+
+
+def test_cache_bounded_by_bytes():
+    data = _rand(0, 60, 4, 5)
+    result = mine(data, KyivConfig(tau=1, kmax=2))
+    per_entry = CacheEntry(
+        key=make_key(1, 1, 2, "ascending"), result=result, source="cold", info={}
+    ).nbytes()
+    assert per_entry > 0
+    cache = ResultCache(capacity=64, max_bytes=3 * per_entry)
+    for v in range(1, 7):
+        cache.put(
+            CacheEntry(
+                key=make_key(v, 1, 2, "ascending"),
+                result=result,
+                source="cold",
+                info={},
+            )
+        )
+    stats = cache.stats()
+    assert stats["entries"] == 3  # byte bound, not the 64-entry capacity
+    assert stats["bytes"] <= stats["max_bytes"]
+    # LRU order: the newest versions survived
+    assert cache.get(make_key(6, 1, 2, "ascending")) is not None
+    assert cache.get(make_key(1, 1, 2, "ascending")) is None
+
+
+def test_cache_oversized_entry_still_cached():
+    data = _rand(0, 60, 4, 5)
+    result = mine(data, KyivConfig(tau=1, kmax=2))
+    cache = ResultCache(capacity=4, max_bytes=1)  # smaller than any entry
+    entry = CacheEntry(
+        key=make_key(1, 1, 2, "ascending"), result=result, source="cold", info={}
+    )
+    cache.put(entry)
+    assert cache.get(entry.key) is entry  # newest is never evicted
+
+
+def test_service_cache_bytes_in_stats():
+    svc = MiningService.from_dataset(_rand(0, 80, 4, 5), cache_max_bytes=1 << 30)
+    svc.mine(tau=1, kmax=2)
+    stats = svc.stats()["cache"]
+    assert stats["max_bytes"] == 1 << 30
+    assert stats["bytes"] > 0
+    svc.close()
+
+
+def test_http_readyz_and_deadline(http_service):
+    svc, port = http_service
+    code, body = _req(port, "/readyz")
+    assert code == 200 and body == {"ready": True, "reason": "ok"}
+    # an already-expired deadline returns 499 with the partial body
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _req(port, "/mine", {"tau": 1, "kmax": 4, "deadline_s": 0.0})
+    assert e.value.code == 499
+    body = json.loads(e.value.read())
+    assert body["source"] == "partial" and body["info"]["interrupted"] == "deadline"
+    # the failed deadline did not wedge anything
+    code, m = _req(port, "/mine", {"tau": 1, "kmax": 4})
+    assert code == 200 and m["source"] == "cold"
+    code, c = _req(port, "/cancel", {"tau": 1, "kmax": 4})
+    assert code == 200 and c == {"cancelled": 0}
+
+
+def test_http_readyz_not_ready_returns_503():
+    from repro.launch.serve_miner import make_server
+
+    svc = MiningService(engine="numpy", defer_recovery=True)
+    server = make_server(svc, port=0)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    port = server.server_address[1]
+    try:
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _req(port, "/readyz")
+        assert e.value.code == 503
+        assert json.loads(e.value.read())["reason"] == "recovering"
+        # liveness stays green while readiness is red
+        assert _req(port, "/healthz")[1] == {"ok": True}
+        # data routes 503 (retryable) instead of 500
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _req(port, "/mine?tau=1&kmax=2")
+        assert e.value.code == 503
+        svc.recover()
+        assert _req(port, "/readyz")[0] == 200
+    finally:
+        server.shutdown()
+        server.server_close()
+        svc.close()
+
+
+def test_service_drain_counters():
+    svc = MiningService.from_dataset(_rand(0, 80, 4, 5))
+    svc.mine(tau=1, kmax=2)
+    info = svc.drain(timeout=1.0)
+    assert info == {"inflight": 0, "drained": 0, "abandoned": 0}
+    stats = svc.stats()
+    assert stats["drain"] == info and stats["served"] == 1
+    svc.close()
