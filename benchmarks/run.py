@@ -4,6 +4,10 @@ Prints ``name,us_per_call,derived`` CSV. Quick mode (default) scales the
 paper's datasets to this single-core container; ``--full`` selects
 paper-scale parameters (hours of runtime). Raw per-bench data is saved to
 artifacts/bench/*.json.
+
+``--summary`` additionally writes ``benchmarks/BENCH_summary.json``: this
+run's rows plus every standalone ``BENCH_*.json`` record already in the
+benchmarks directory, so CI can upload one consolidated artifact.
 """
 
 from __future__ import annotations
@@ -37,6 +41,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale datasets")
     ap.add_argument("--only", default=None, help="comma-separated bench keys")
+    ap.add_argument("--summary", action="store_true",
+                    help="write benchmarks/BENCH_summary.json consolidating "
+                         "this run's rows with standalone BENCH_*.json files")
     args = ap.parse_args()
     cfg = FULL if args.full else QUICK
     only = set(args.only.split(",")) if args.only else None
@@ -64,6 +71,39 @@ def main() -> None:
             print(f"# {key} FAILED: {e!r}", file=sys.stderr)
 
     emit(all_rows)
+    if args.summary:
+        write_summary(all_rows, mode="full" if args.full else "quick")
+
+
+def write_summary(rows: list[Row], mode: str) -> str:
+    """Consolidate this run's rows + standalone BENCH_*.json records into
+    one ``benchmarks/BENCH_summary.json`` artifact."""
+    bench_dir = os.path.dirname(os.path.abspath(__file__))
+    standalone = {}
+    for fname in sorted(os.listdir(bench_dir)):
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        if fname == "BENCH_summary.json":
+            continue
+        try:
+            with open(os.path.join(bench_dir, fname)) as f:
+                standalone[fname[len("BENCH_"):-len(".json")]] = json.load(f)
+        except Exception as e:
+            standalone[fname] = {"error": repr(e)}
+    summary = {
+        "generated_at": time.time(),
+        "mode": mode,
+        "rows": [
+            {"name": r.name, "us_per_call": r.us_per_call, "derived": r.derived}
+            for r in rows
+        ],
+        "standalone": standalone,
+    }
+    path = os.path.join(bench_dir, "BENCH_summary.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1, default=str)
+    print(f"# wrote {path}", file=sys.stderr)
+    return path
 
 
 if __name__ == "__main__":

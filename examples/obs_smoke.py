@@ -1,0 +1,136 @@
+"""End-to-end smoke of the telemetry substrate over real HTTP.
+
+Starts ``repro.launch.serve_miner`` as a subprocess (JSON logs on), mines,
+then checks the observability contract the CI obs-smoke job enforces:
+
+  1. a cold /mine response and its ``X-Trace-Id`` header carry the same
+     trace id, and ``GET /trace?id=...`` returns a span tree whose direct
+     children account for >= 95% of the request's wall time,
+  2. a client-supplied ``X-Trace-Id`` is honoured and echoed back,
+  3. ``GET /metrics`` is valid Prometheus text exposition (linted with
+     ``repro.obs.metrics.lint_exposition``) with >= 20 metric families,
+  4. ``GET /stats`` keeps its pre-observability sections (backward
+     compatibility) and folds the registry snapshot in under ``"obs"``.
+
+Used by the CI obs-smoke job; also runnable directly:
+
+  PYTHONPATH=src python examples/obs_smoke.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+import urllib.error
+import urllib.request
+
+PORT = int(os.environ.get("SMOKE_PORT", "8754"))
+BASE = f"http://127.0.0.1:{PORT}"
+
+
+def req(path: str, payload: dict | None = None, headers: dict | None = None):
+    request = urllib.request.Request(
+        BASE + path,
+        data=json.dumps(payload).encode() if payload is not None else None,
+        headers={"Content-Type": "application/json", **(headers or {})},
+    )
+    resp = urllib.request.urlopen(request, timeout=60)
+    return resp, resp.read()
+
+
+def req_json(path: str, payload: dict | None = None, headers: dict | None = None):
+    resp, body = req(path, payload, headers)
+    return resp, json.loads(body)
+
+
+def wait_healthy(proc: subprocess.Popen, timeout: float = 60.0) -> None:
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            raise RuntimeError(f"serve_miner exited early: rc={proc.returncode}")
+        try:
+            if req_json("/healthz")[1].get("ok"):
+                return
+        except (urllib.error.URLError, ConnectionError):
+            time.sleep(0.3)
+    raise RuntimeError("serve_miner did not become healthy in time")
+
+
+def main() -> None:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    sys.path.insert(0, src)
+    from repro.obs.metrics import lint_exposition
+
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.launch.serve_miner",
+            "--port", str(PORT),
+            "--preload", "randomized", "--n", "500", "--m", "6",
+            "--log-json", "--log-level", "info",
+        ],
+        env=env,
+    )
+    try:
+        wait_healthy(proc)
+
+        # 1. cold mine: trace id in body == header, span tree retrievable
+        resp, m1 = req_json("/mine", {"tau": 1, "kmax": 3, "max_itemsets": 3})
+        assert m1["source"] == "cold", m1["source"]
+        tid = m1["trace_id"]
+        assert resp.headers["X-Trace-Id"] == tid, (resp.headers, tid)
+        _, tr = req_json(f"/trace?id={tid}")
+        tree = tr["trace"]
+        assert tree["trace_id"] == tid
+        assert tree["coverage"] >= 0.95, tree["coverage"]
+        assert tree["n_spans"] >= 5, tree["n_spans"]
+
+        # 2. client-supplied correlation id is honoured
+        resp2, m2 = req_json(
+            "/mine", {"tau": 1, "kmax": 3}, headers={"X-Trace-Id": "smoke0001"}
+        )
+        assert m2["trace_id"] == "smoke0001"
+        assert resp2.headers["X-Trace-Id"] == "smoke0001"
+
+        # 3. /metrics: valid exposition, >= 20 families
+        resp3, body3 = req("/metrics")
+        assert resp3.headers["Content-Type"].startswith(
+            "text/plain; version=0.0.4"
+        )
+        text = body3.decode()
+        problems = lint_exposition(text)
+        assert not problems, problems[:10]
+        families = {
+            line.split()[2]
+            for line in text.splitlines()
+            if line.startswith("# TYPE")
+        }
+        assert len(families) >= 20, sorted(families)
+        assert "repro_mine_wall_seconds" in families
+        assert "repro_http_requests_total" in families
+
+        # 4. /stats keeps its old shape and gains the obs fold-in
+        _, stats = req_json("/stats")
+        for section in ("store", "cache", "scheduler", "served", "http"):
+            assert section in stats, section
+        assert "metrics" in stats["obs"] and "traces" in stats["obs"]
+
+        print(
+            "OBS_SMOKE_OK "
+            f"families={len(families)} coverage={tree['coverage']:.3f} "
+            f"spans={tree['n_spans']} trace_id={tid}"
+        )
+    finally:
+        proc.terminate()
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+
+
+if __name__ == "__main__":
+    main()

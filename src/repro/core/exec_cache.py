@@ -36,6 +36,7 @@ __all__ = [
     "exec_family",
     "stats",
     "reset",
+    "publish_metrics",
 ]
 
 
@@ -156,3 +157,38 @@ def stats() -> dict:
 
 def reset(family: str | None = None) -> None:
     SHARED_EXEC_CACHE.clear(family)
+
+
+def publish_metrics(registry=None) -> None:
+    """Mirror the shared executable cache into a metrics registry as the
+    ``exec_cache`` named collector (idempotent: re-registering replaces).
+
+    The cache keeps its own counters — they predate the registry and the
+    ``/stats`` ``executables`` section is built from them — so the bridge
+    reads them at scrape time instead of double-counting at every ``get``.
+    Imported lazily so this module stays a stdlib-only leaf for callers
+    that never scrape metrics.
+    """
+    from ..obs import metrics as _om
+
+    reg = registry or _om.REGISTRY
+    g_entries = reg.gauge(
+        "repro_exec_cache_entries",
+        "Bound executables resident per kernel family.",
+        ("family",),
+    )
+    c_hits = reg.counter(
+        "repro_exec_cache_hits_total", "Executable-cache hits.", ("family",)
+    )
+    c_misses = reg.counter(
+        "repro_exec_cache_misses_total", "Executable-cache misses.", ("family",)
+    )
+
+    def _collect():
+        s = SHARED_EXEC_CACHE.stats()
+        for fam, fs in s["families"].items():
+            g_entries.set(fs["entries"], family=fam)
+            c_hits.set_total(fs.get("hits", 0), family=fam)
+            c_misses.set_total(fs.get("misses", 0), family=fam)
+
+    reg.register_collector("exec_cache", _collect)

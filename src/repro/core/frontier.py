@@ -60,6 +60,9 @@ from typing import Any
 import numpy as np
 
 from ..kernels.intersect.ref import CLASS_EMIT, CLASS_STORE
+from ..obs import metrics as _om
+from ..obs.trace import device_sync as _obs_device_sync
+from ..obs.trace import span as _obs_span
 from .bounds import apply_bounds
 from .placement import HostPlacement
 from .prefix import (
@@ -74,6 +77,48 @@ from .support import ItemsetIndex
 __all__ = ["LevelFrontier", "expand_mirrors", "mine_levels"]
 
 _HOST_REFERENCE = HostPlacement()
+
+# Per-stage level timings land in the fixed log-scale time ladder — the
+# paper's Fig. 2 time-distribution view, as a live histogram per stage.
+_LEVEL_SECONDS = _om.histogram(
+    "repro_mine_level_seconds",
+    "Per-level wall time by mining stage (candidates=gen+support+bounds, "
+    "intersect=dispatch+sync, classify=partition/consume, total).",
+    ("stage",),
+)
+_LEVEL_PAIRS = _om.counter(
+    "repro_mine_pairs_total",
+    "Candidate-pair outcomes across all mined levels.",
+    ("outcome",),
+)
+_LEVELS_TOTAL = _om.counter(
+    "repro_mine_levels_total",
+    "Level transitions mined, by frontier path.",
+    ("path",),
+)
+
+
+def _record_level(ls, path: str, sp) -> None:
+    """Fold one finished level's stats into the registry + its span."""
+    _LEVEL_SECONDS.observe(ls.time_candidates, stage="candidates")
+    _LEVEL_SECONDS.observe(ls.time_intersect, stage="intersect")
+    _LEVEL_SECONDS.observe(ls.time_classify, stage="classify")
+    _LEVEL_SECONDS.observe(ls.time_total, stage="total")
+    _LEVEL_PAIRS.inc(ls.candidates, outcome="candidates")
+    _LEVEL_PAIRS.inc(ls.support_pruned, outcome="support_pruned")
+    _LEVEL_PAIRS.inc(ls.bound_pruned, outcome="bound_pruned")
+    _LEVEL_PAIRS.inc(ls.intersections, outcome="intersections")
+    _LEVEL_PAIRS.inc(ls.skipped_absent_uniform, outcome="skipped")
+    _LEVEL_PAIRS.inc(ls.emitted, outcome="emitted")
+    _LEVEL_PAIRS.inc(ls.stored, outcome="stored")
+    _LEVELS_TOTAL.inc(path=path)
+    sp.set(
+        path=path,
+        candidates=ls.candidates,
+        emitted=ls.emitted,
+        stored=ls.stored,
+        level_bytes=ls.level_bytes,
+    )
 
 
 def expand_mirrors(
@@ -249,71 +294,75 @@ def mine_levels(
 
         if control is not None:
             control.check()
-        ls = LevelStats(k=k)
-        lt0 = time.perf_counter()
-        write_children = k < kmax
+        with _obs_span("mine.level", k=k) as _lsp:
+            ls = LevelStats(k=k)
+            lt0 = time.perf_counter()
+            write_children = k < kmax
 
-        pipe = make_pipeline(frontier.bits, frontier.counts, tau)
-        placement = getattr(pipe, "placement", None)
-        device_path = _device_frontier_capable(placement, pipe, config)
+            pipe = make_pipeline(frontier.bits, frontier.counts, tau)
+            placement = getattr(pipe, "placement", None)
+            device_path = _device_frontier_capable(placement, pipe, config)
 
-        # the host index of this parent level is needed beyond the host path
-        # when checkpoints will serialise it, or when this / the next
-        # transition runs the k_max bound pruning (its grandparent lookups)
-        need_index = on_level_end is not None or (
-            config.use_bounds and kmax - 1 <= k <= kmax
-        )
-
-        if device_path:
-            nxt, level_index = _advance_device(
-                frontier,
-                pipe,
-                placement,
-                prep,
-                config,
-                ls,
-                results,
-                k,
-                write_children,
-                batch_pairs,
-                grandparent_index,
-                n,
-                need_index,
-                control,
-            )
-        else:
-            nxt, level_index = _advance_host(
-                frontier,
-                pipe,
-                placement,
-                prep,
-                config,
-                ls,
-                results,
-                k,
-                write_children,
-                batch_pairs,
-                grandparent_index,
-                n,
-                control,
+            # the host index of this parent level is needed beyond the host
+            # path when checkpoints will serialise it, or when this / the next
+            # transition runs the k_max bound pruning (its grandparent lookups)
+            need_index = on_level_end is not None or (
+                config.use_bounds and kmax - 1 <= k <= kmax
             )
 
-        ls.time_total = time.perf_counter() - lt0
-        stats.append(ls)
+            if device_path:
+                nxt, level_index = _advance_device(
+                    frontier,
+                    pipe,
+                    placement,
+                    prep,
+                    config,
+                    ls,
+                    results,
+                    k,
+                    write_children,
+                    batch_pairs,
+                    grandparent_index,
+                    n,
+                    need_index,
+                    control,
+                )
+            else:
+                nxt, level_index = _advance_host(
+                    frontier,
+                    pipe,
+                    placement,
+                    prep,
+                    config,
+                    ls,
+                    results,
+                    k,
+                    write_children,
+                    batch_pairs,
+                    grandparent_index,
+                    n,
+                    control,
+                )
 
-        # eager retirement: the parent level's pipeline residency, frontier
-        # tables and driver-owned bitsets all drop now — device memory holds
-        # only the transition's two live levels (peak_level_bytes)
-        if hasattr(pipe, "retire"):
-            pipe.retire()
-        grandparent_index = level_index
-        old = frontier
-        frontier = nxt
-        k += 1
+            ls.time_total = time.perf_counter() - lt0
+            stats.append(ls)
+            _record_level(ls, "device" if device_path else "host", _lsp)
 
-        if on_level_end is not None:
-            on_level_end(k - 1, make_state(k, frontier, grandparent_index))
-        old.retire()
+            # eager retirement: the parent level's pipeline residency,
+            # frontier tables and driver-owned bitsets all drop now — device
+            # memory holds only the transition's two live levels
+            # (peak_level_bytes)
+            if hasattr(pipe, "retire"):
+                pipe.retire()
+            grandparent_index = level_index
+            old = frontier
+            frontier = nxt
+            k += 1
+
+            if on_level_end is not None:
+                with _obs_span("mine.checkpoint", k=k - 1):
+                    on_level_end(k - 1, make_state(k, frontier, grandparent_index))
+            old.retire()
 
     frontier.retire()
 
@@ -342,13 +391,14 @@ def _advance_host(
         if placement is not None and getattr(placement, "kind", None) == "host"
         else _HOST_REFERENCE
     )
-    ct0 = time.perf_counter()
-    fstate = host_frontier.prepare_frontier(
-        frontier.itemsets, frontier.counts, prep.n_l
-    )
-    level_index = fstate  # the host frontier state *is* the support index
-    sizes = prefix_group_sizes(frontier.itemsets)
-    ls.time_candidates += time.perf_counter() - ct0
+    with _obs_span("frontier.candidates", phase="prepare"):
+        ct0 = time.perf_counter()
+        fstate = host_frontier.prepare_frontier(
+            frontier.itemsets, frontier.counts, prep.n_l
+        )
+        level_index = fstate  # the host frontier state *is* the support index
+        sizes = prefix_group_sizes(frontier.itemsets)
+        ls.time_candidates += time.perf_counter() - ct0
 
     level = frontier.as_level()
     new_itemsets, new_counts, new_bits = [], [], []
@@ -357,29 +407,32 @@ def _advance_host(
         """Block on a dispatched batch and consume its classified output."""
         sel_itemsets, pairs, handle = entry
         it0 = time.perf_counter()
-        child, counts, classes = handle.result()
+        with _obs_span("intersect.sync"):
+            child, counts, classes = handle.result()
         ls.time_intersect += time.perf_counter() - it0
 
-        ct0 = time.perf_counter()
-        if classes is None:
-            # host classification (legacy intersect_fn / fused_classify=False)
-            ci = level.counts[pairs[:, 0]]
-            cj = level.counts[pairs[:, 1]]
-            minp = np.minimum(ci, cj)
-            absent_uniform = (counts == 0) | (counts == minp)
-            infrequent = (~absent_uniform) & (counts <= tau)
-            store = (~absent_uniform) & (~infrequent)
-            inf_rows = np.nonzero(infrequent)[0]
-            n_skipped = int(absent_uniform.sum())
-        else:
-            # fused path: the engine already classified every pair
-            inf_rows = np.nonzero(classes == CLASS_EMIT)[0]
-            store = classes == CLASS_STORE
-            n_skipped = len(classes) - len(inf_rows) - int(store.sum())
-        # the classify clock stops here, before emission/store bookkeeping —
-        # exactly where the pre-frontier driver stopped it, so
-        # bench_fused_pipeline's classify-speedup history stays comparable
-        ls.time_classify += time.perf_counter() - ct0
+        with _obs_span("level.classify"):
+            ct0 = time.perf_counter()
+            if classes is None:
+                # host classification (legacy intersect_fn / fused_classify=False)
+                ci = level.counts[pairs[:, 0]]
+                cj = level.counts[pairs[:, 1]]
+                minp = np.minimum(ci, cj)
+                absent_uniform = (counts == 0) | (counts == minp)
+                infrequent = (~absent_uniform) & (counts <= tau)
+                store = (~absent_uniform) & (~infrequent)
+                inf_rows = np.nonzero(infrequent)[0]
+                n_skipped = int(absent_uniform.sum())
+            else:
+                # fused path: the engine already classified every pair
+                inf_rows = np.nonzero(classes == CLASS_EMIT)[0]
+                store = classes == CLASS_STORE
+                n_skipped = len(classes) - len(inf_rows) - int(store.sum())
+            # the classify clock stops here, before emission/store
+            # bookkeeping — exactly where the pre-frontier driver stopped it,
+            # so bench_fused_pipeline's classify-speedup history stays
+            # comparable
+            ls.time_classify += time.perf_counter() - ct0
         ls.skipped_absent_uniform += n_skipped
 
         if len(inf_rows):
@@ -402,24 +455,27 @@ def _advance_host(
             continue
         if control is not None:
             control.check()
-        ct0 = time.perf_counter()
-        cand, ok = host_frontier.frontier_dispatch(fstate, lo, hi, n_pairs)
-        ls.candidates += cand.m
-        ls.support_pruned += int((~ok).sum())
-        ls.time_candidates += time.perf_counter() - ct0
-
-        if k == config.kmax and config.use_bounds and ok.any():
+        with _obs_span("frontier.candidates"):
             ct0 = time.perf_counter()
-            alive_idx = np.nonzero(ok)[0]
-            sub = CandidateBatch(
-                i_idx=cand.i_idx[alive_idx],
-                j_idx=cand.j_idx[alive_idx],
-                itemsets=cand.itemsets[alive_idx],
-            )
-            pruned = apply_bounds(sub, level, level_index, grandparent_index, n, tau)
-            ls.bound_pruned += int(pruned.sum())
-            ok[alive_idx[pruned]] = False
+            cand, ok = host_frontier.frontier_dispatch(fstate, lo, hi, n_pairs)
+            ls.candidates += cand.m
+            ls.support_pruned += int((~ok).sum())
             ls.time_candidates += time.perf_counter() - ct0
+
+            if k == config.kmax and config.use_bounds and ok.any():
+                ct0 = time.perf_counter()
+                alive_idx = np.nonzero(ok)[0]
+                sub = CandidateBatch(
+                    i_idx=cand.i_idx[alive_idx],
+                    j_idx=cand.j_idx[alive_idx],
+                    itemsets=cand.itemsets[alive_idx],
+                )
+                pruned = apply_bounds(
+                    sub, level, level_index, grandparent_index, n, tau
+                )
+                ls.bound_pruned += int(pruned.sum())
+                ok[alive_idx[pruned]] = False
+                ls.time_candidates += time.perf_counter() - ct0
 
         sel = np.nonzero(ok)[0]
         ls.intersections += len(sel)
@@ -427,7 +483,8 @@ def _advance_host(
             continue
         pairs = np.stack([cand.i_idx[sel], cand.j_idx[sel]], axis=1).astype(np.int32)
         it0 = time.perf_counter()
-        handle = pipe.submit(pairs, write_children)  # async dispatch
+        with _obs_span("intersect.dispatch", pairs=len(sel)):
+            handle = pipe.submit(pairs, write_children)  # async dispatch
         ls.time_intersect += time.perf_counter() - it0
         entry = (cand.itemsets[sel], pairs, handle)
         if not config.double_buffer:
@@ -483,10 +540,13 @@ def _advance_device(
     — that level is count-only, so no bitsets move either way.
     """
     tau = config.tau
-    ct0 = time.perf_counter()
-    fstate = placement.prepare_frontier(frontier.itemsets, frontier.counts, prep.n_l)
-    sizes = prefix_group_sizes(frontier.itemsets)
-    ls.time_candidates += time.perf_counter() - ct0
+    with _obs_span("frontier.candidates", phase="prepare"):
+        ct0 = time.perf_counter()
+        fstate = placement.prepare_frontier(
+            frontier.itemsets, frontier.counts, prep.n_l
+        )
+        sizes = prefix_group_sizes(frontier.itemsets)
+        ls.time_candidates += time.perf_counter() - ct0
 
     host_bounds = k == config.kmax and config.use_bounds
     level_index = None
@@ -499,12 +559,14 @@ def _advance_device(
         if entry[0] == "host":
             _, lpos, pairs, handle = entry
             it0 = time.perf_counter()
-            child, counts, classes = handle.result()
+            with _obs_span("intersect.sync"):
+                child, counts, classes = handle.result()
             ls.time_intersect += time.perf_counter() - it0
-            ct0 = time.perf_counter()
-            inf_rows = np.nonzero(classes == CLASS_EMIT)[0]
-            store = classes == CLASS_STORE
-            ls.time_classify += time.perf_counter() - ct0
+            with _obs_span("level.classify"):
+                ct0 = time.perf_counter()
+                inf_rows = np.nonzero(classes == CLASS_EMIT)[0]
+                store = classes == CLASS_STORE
+                ls.time_classify += time.perf_counter() - ct0
             ls.skipped_absent_uniform += len(classes) - len(inf_rows) - int(store.sum())
             if len(inf_rows):
                 _emit_rows(
@@ -515,31 +577,33 @@ def _advance_device(
 
         _, mb, cpairs, n_ok_dev, handle = entry
         it0 = time.perf_counter()
-        child_d, cnt_d, cls_d = handle.raw()
-        n_ok = int(n_ok_dev)  # first host sync of the batch
+        with _obs_span("intersect.sync"):
+            child_d, cnt_d, cls_d = handle.raw()
+            n_ok = int(n_ok_dev)  # first host sync of the batch
         ls.time_intersect += time.perf_counter() - it0
         ls.support_pruned += mb - n_ok
         ls.intersections += n_ok
         if n_ok == 0:
             return
 
-        ct0 = time.perf_counter()
-        order, n_emit_d, n_store_d = placement.frontier_partition(cls_d)
-        # the batch's bookkeeping arrays (segment order, pairs, counts) are
-        # a few ints per pair — fetch them whole and slice on the host, so
-        # the only per-batch device programs are the three jitted
-        # bucket-static ops (dispatch / mask / partition); a dynamically
-        # shaped device op per batch would recompile endlessly (SPMD
-        # programs on a mesh make that pathological)
-        order_h = np.asarray(order)
-        pairs_h = np.asarray(cpairs)
-        cnt_h = np.asarray(cnt_d).astype(np.int64)
-        n_emit, n_store = int(n_emit_d), int(n_store_d)
-        bucket = int(pairs_h.shape[0])
-        seg = bucket - n_emit - n_store  # skip segment incl. padding self-pairs
-        # classify clock covers partition + fetches, not emission/store
-        # bookkeeping — mirroring the host path's (historical) attribution
-        ls.time_classify += time.perf_counter() - ct0
+        with _obs_span("level.classify"):
+            ct0 = time.perf_counter()
+            order, n_emit_d, n_store_d = placement.frontier_partition(cls_d)
+            # the batch's bookkeeping arrays (segment order, pairs, counts)
+            # are a few ints per pair — fetch them whole and slice on the
+            # host, so the only per-batch device programs are the three
+            # jitted bucket-static ops (dispatch / mask / partition); a
+            # dynamically shaped device op per batch would recompile
+            # endlessly (SPMD programs on a mesh make that pathological)
+            order_h = np.asarray(order)
+            pairs_h = np.asarray(cpairs)
+            cnt_h = np.asarray(cnt_d).astype(np.int64)
+            n_emit, n_store = int(n_emit_d), int(n_store_d)
+            bucket = int(pairs_h.shape[0])
+            seg = bucket - n_emit - n_store  # skip segment incl. padding
+            # classify clock covers partition + fetches, not emission/store
+            # bookkeeping — mirroring the host path's historical attribution
+            ls.time_classify += time.perf_counter() - ct0
         ls.skipped_absent_uniform += n_ok - n_emit - n_store
 
         if n_emit:
@@ -571,47 +635,54 @@ def _advance_device(
         if control is not None:
             control.check()
         ls.candidates += n_pairs
-        ct0 = time.perf_counter()
-        pairs_d, ok_d = placement.frontier_dispatch(fstate, lo, hi, n_pairs)
-        ls.time_candidates += time.perf_counter() - ct0
+        with _obs_span("frontier.candidates"):
+            ct0 = time.perf_counter()
+            pairs_d, ok_d = placement.frontier_dispatch(fstate, lo, hi, n_pairs)
+            ls.time_candidates += time.perf_counter() - ct0
+            _obs_device_sync(pairs_d, ok_d)
 
         if host_bounds:
             # the one remaining host-assisted step: Lemma 4.6/Cor. 4.7 needs
             # the grandparent lookups, so survivors come to the host here
-            ct0 = time.perf_counter()
-            okh = np.asarray(ok_d)
-            pairs_h = np.asarray(pairs_d)[okh]
-            n_sup = int(okh.sum())
-            ls.support_pruned += n_pairs - n_sup
-            if n_sup == 0:
+            with _obs_span("frontier.candidates", phase="bounds"):
+                ct0 = time.perf_counter()
+                okh = np.asarray(ok_d)
+                pairs_h = np.asarray(pairs_d)[okh]
+                n_sup = int(okh.sum())
+                ls.support_pruned += n_pairs - n_sup
+                if n_sup == 0:
+                    ls.time_candidates += time.perf_counter() - ct0
+                    continue
+                lpos = _candidate_lpos(frontier, pairs_h)
+                sub = CandidateBatch(
+                    i_idx=pairs_h[:, 0].astype(np.int64),
+                    j_idx=pairs_h[:, 1].astype(np.int64),
+                    itemsets=lpos,
+                )
+                pruned = apply_bounds(
+                    sub, frontier.as_level(), level_index, grandparent_index,
+                    n, tau,
+                )
+                ls.bound_pruned += int(pruned.sum())
+                keep = ~pruned
+                ls.intersections += int(keep.sum())
                 ls.time_candidates += time.perf_counter() - ct0
-                continue
-            lpos = _candidate_lpos(frontier, pairs_h)
-            sub = CandidateBatch(
-                i_idx=pairs_h[:, 0].astype(np.int64),
-                j_idx=pairs_h[:, 1].astype(np.int64),
-                itemsets=lpos,
-            )
-            pruned = apply_bounds(
-                sub, frontier.as_level(), level_index, grandparent_index, n, tau
-            )
-            ls.bound_pruned += int(pruned.sum())
-            keep = ~pruned
-            ls.intersections += int(keep.sum())
-            ls.time_candidates += time.perf_counter() - ct0
             if not keep.any():
                 continue
             sel_pairs = np.ascontiguousarray(pairs_h[keep])
             it0 = time.perf_counter()
-            handle = pipe.submit(sel_pairs, write_children)
+            with _obs_span("intersect.dispatch", pairs=int(keep.sum())):
+                handle = pipe.submit(sel_pairs, write_children)
             ls.time_intersect += time.perf_counter() - it0
             entry = ("host", lpos[keep], sel_pairs, handle)
         else:
-            ct0 = time.perf_counter()
-            cpairs, n_ok_dev = placement.frontier_mask(fstate, pairs_d, ok_d)
-            ls.time_candidates += time.perf_counter() - ct0
+            with _obs_span("frontier.candidates", phase="mask"):
+                ct0 = time.perf_counter()
+                cpairs, n_ok_dev = placement.frontier_mask(fstate, pairs_d, ok_d)
+                ls.time_candidates += time.perf_counter() - ct0
             it0 = time.perf_counter()
-            handle = pipe.submit_padded(cpairs, n_pairs, write_children)
+            with _obs_span("intersect.dispatch", pairs=n_pairs):
+                handle = pipe.submit_padded(cpairs, n_pairs, write_children)
             ls.time_intersect += time.perf_counter() - it0
             entry = ("dev", n_pairs, cpairs, n_ok_dev, handle)
 

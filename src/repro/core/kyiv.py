@@ -54,6 +54,9 @@ import numpy as np
 # ``repro.core`` at its bottom line; importing through the half-initialised
 # kernels package namespace would cycle, the submodules are always loaded.
 from ..kernels.intersect.ops import LegacyIntersectPipeline, LevelPipeline
+from ..obs import metrics as _om
+from ..obs.trace import span as _obs_span
+from ..obs.trace import start_trace as _obs_start_trace
 from .frontier import LevelFrontier, expand_mirrors, mine_levels
 from .items import ItemTable, itemize
 from .placement import resolve_placement
@@ -72,6 +75,21 @@ __all__ = [
     "mine_preprocessed",
     "prepare",
 ]
+
+_MINE_WALL = _om.histogram(
+    "repro_mine_wall_seconds", "End-to-end wall time of one mining run."
+)
+_MINE_RUNS = _om.counter(
+    "repro_mine_runs_total", "Mining runs by terminal status.", ("status",)
+)
+_MINE_EMITTED = _om.counter(
+    "repro_mine_emitted_itemsets_total",
+    "Minimal infrequent itemsets emitted across all runs.",
+)
+_MINE_PEAK = _om.gauge(
+    "repro_mine_peak_level_bytes",
+    "peak_level_bytes of the most recent mining run.",
+)
 
 
 class MiningInterrupted(RuntimeError):
@@ -332,7 +350,51 @@ def mine_preprocessed(
     boundary — an interrupted run returns the partial result with
     ``MiningResult.interrupted`` set instead of raising. The level loop
     itself lives in :func:`repro.core.frontier.mine_levels`.
+
+    Every run records into :mod:`repro.obs`: a ``mine`` span (the trace
+    root when no request trace is active, a child span otherwise) over
+    ``mine.seed`` + per-level ``mine.level`` children, plus the
+    ``repro_mine_*`` metric families.
     """
+    with _obs_start_trace("mine") as _msp:
+        try:
+            result = _mine_preprocessed_inner(
+                prep,
+                config,
+                intersect_fn=intersect_fn,
+                pipeline_factory=pipeline_factory,
+                on_level_end=on_level_end,
+                resume_state=resume_state,
+                control=control,
+            )
+        except Exception:
+            _MINE_RUNS.inc(status="error")
+            _msp.set(status="error")
+            raise
+        status = "interrupted" if result.interrupted else "ok"
+        _msp.set(
+            status=status,
+            emitted=len(result.itemsets),
+            levels=len(result.stats),
+            peak_level_bytes=result.peak_level_bytes,
+        )
+        _MINE_WALL.observe(result.wall_time)
+        _MINE_RUNS.inc(status=status)
+        _MINE_EMITTED.inc(len(result.itemsets))
+        _MINE_PEAK.set(result.peak_level_bytes)
+    return result
+
+
+def _mine_preprocessed_inner(
+    prep: Preprocessed,
+    config: KyivConfig,
+    *,
+    intersect_fn: Callable[..., Any] | None = None,
+    pipeline_factory: Callable[..., Any] | None = None,
+    on_level_end: Callable[[int, "MiningState"], None] | None = None,
+    resume_state: "MiningState | dict[str, Any] | None" = None,
+    control: RunControl | None = None,
+) -> MiningResult:
     t_start = time.perf_counter()
     table = prep.table
     if pipeline_factory is not None:
@@ -353,32 +415,33 @@ def mine_preprocessed(
     results: list[tuple[tuple[int, ...], int]] = []
     stats: list[LevelStats] = []
 
-    # k = 1: emit τ-infrequent singletons (line 5) with mirror-free expansion
-    # (every item, duplicate or not, is kept in the item table, so the
-    # infrequent singletons are already complete).
-    for it in prep.infrequent_items:
-        results.append(((int(it),), int(table.freq[it])))
-    s1 = LevelStats(k=1, emitted=len(prep.infrequent_items), stored=prep.n_l)
-    s1.level_bytes = prep.l_bits.nbytes
-    stats.append(s1)
+    with _obs_span("mine.seed"):
+        # k = 1: emit τ-infrequent singletons (line 5) with mirror-free
+        # expansion (every item, duplicate or not, is kept in the item
+        # table, so the infrequent singletons are already complete).
+        for it in prep.infrequent_items:
+            results.append(((int(it),), int(table.freq[it])))
+        s1 = LevelStats(k=1, emitted=len(prep.infrequent_items), stored=prep.n_l)
+        s1.level_bytes = prep.l_bits.nbytes
+        stats.append(s1)
 
-    # level 1 of the prefix tree over L^< (line 8)
-    frontier = LevelFrontier(
-        k=1,
-        itemsets=np.arange(prep.n_l, dtype=np.int32)[:, None],
-        counts=prep.l_freq.copy(),
-        bits=prep.l_bits,
-    )
-    grandparent_index: ItemsetIndex | None = None
-    start_k = 2
+        # level 1 of the prefix tree over L^< (line 8)
+        frontier = LevelFrontier(
+            k=1,
+            itemsets=np.arange(prep.n_l, dtype=np.int32)[:, None],
+            counts=prep.l_freq.copy(),
+            bits=prep.l_bits,
+        )
+        grandparent_index: ItemsetIndex | None = None
+        start_k = 2
 
-    if resume_state is not None:
-        st = MiningState.from_mapping(resume_state)
-        results = list(st.results)
-        stats = list(st.stats)
-        frontier = LevelFrontier.from_level(st.level)
-        grandparent_index = st.grandparent_index
-        start_k = st.next_k
+        if resume_state is not None:
+            st = MiningState.from_mapping(resume_state)
+            results = list(st.results)
+            stats = list(st.stats)
+            frontier = LevelFrontier.from_level(st.level)
+            grandparent_index = st.grandparent_index
+            start_k = st.next_k
 
     def make_state(next_k: int, fr: LevelFrontier, gp) -> MiningState:
         return MiningState(

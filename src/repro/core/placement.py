@@ -66,6 +66,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels.intersect import ops as _ops
+from ..obs import metrics as _om
 from .bitops import popcount_rows
 
 __all__ = [
@@ -101,7 +102,23 @@ def set_fault_hook(hook):
     return prev
 
 
-def _guard(site: str) -> None:
+_DISPATCHES = _om.counter(
+    "repro_placement_dispatch_total",
+    "Placement-layer dispatches by seam and backend kind.",
+    ("site", "kind"),
+)
+
+
+def _count_dispatch(site: str, kind: str) -> None:
+    _DISPATCHES.inc(site=site, kind=kind)
+
+
+def _guard(site: str, kind: str = "device") -> None:
+    # metrics first: a dispatch that the fault hook kills still happened
+    # (chaos runs want to see attempted-vs-degraded rates). Host dispatch
+    # never routes through here — it must stay failure-free (see above) —
+    # so HostPlacement methods call _count_dispatch directly.
+    _count_dispatch(site, kind)
     if _fault_hook is not None:
         _fault_hook(site)
 
@@ -232,6 +249,7 @@ class HostPlacement:
         return m  # host gathers have no executable buckets to reuse
 
     def dispatch(self, state, padded_pairs: np.ndarray, write_children: bool):
+        _count_dispatch("dispatch", "host")
         bits, pc, tau, fused = state
         a = bits[padded_pairs[:, 0]]
         b = bits[padded_pairs[:, 1]]
@@ -252,6 +270,7 @@ class HostPlacement:
     def coverage_dispatch(self, state, padded_sets, padded_weights):
         from ..kernels.coverage.ref import coverage_accumulate_host
 
+        _count_dispatch("coverage", "host")
         return coverage_accumulate_host(state, padded_sets, padded_weights)
 
     # -- frontier (the numpy reference path, bit-identical by construction) --
@@ -268,6 +287,7 @@ class HostPlacement:
         from .prefix import CandidateBatch, Level, generate_candidates
         from .support import support_test
 
+        _count_dispatch("frontier", "host")
         itemsets = state.itemsets[lo:hi].astype(np.int32)
         counts = np.zeros(hi - lo, dtype=np.int64)
         batch = generate_candidates(Level(k=0, itemsets=itemsets, counts=counts, bits=None))
@@ -587,7 +607,7 @@ class MeshPlacement:
         return padded_m
 
     def dispatch(self, state, padded_pairs, write_children: bool):
-        _guard("dispatch")
+        _guard("dispatch", "mesh")
         bits, pc, pc_dev, tau, fused, _owned = state
         device_pairs = isinstance(padded_pairs, jax.Array)
         pairs_j = jax.device_put(jnp.asarray(padded_pairs), self._pairs_sharding)
@@ -627,7 +647,7 @@ class MeshPlacement:
         return self.put_bits(bits)
 
     def coverage_dispatch(self, state, padded_sets, padded_weights):
-        _guard("coverage")
+        _guard("coverage", "mesh")
         from ..kernels.coverage import ops as _cov
         from . import sharded as _sh
 
@@ -668,7 +688,7 @@ class MeshPlacement:
         }
 
     def frontier_dispatch(self, state, lo: int, hi: int, n_pairs: int):
-        _guard("frontier")
+        _guard("frontier", "mesh")
         from ..kernels.frontier import ops as _fops
         from ..kernels.frontier.frontier import pack_params
         from . import sharded as _sh

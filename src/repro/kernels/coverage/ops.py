@@ -20,9 +20,16 @@ import numpy as np
 import jax.numpy as jnp
 
 from ...core.exec_cache import exec_family
+from ...obs import metrics as _om
+from ...obs.trace import span as _obs_span
 from ..intersect.ops import _largest_divisor_tile
 from . import coverage as _k
 from .ref import acc_to_record_counts, coverage_accumulate_ref
+
+_COV_BATCHES = _om.counter(
+    "repro_coverage_batches_total",
+    "Coverage accumulator batches dispatched through the placement.",
+)
 
 __all__ = [
     "EXEC_CACHE",
@@ -131,18 +138,20 @@ class CoverageEngine:
             if weights is None
             else np.asarray(weights, dtype=np.int32)
         )
-        for s in range(0, m, self.max_batch_sets):
-            chunk = sets[s : s + self.max_batch_sets]
-            wchunk = wt[s : s + self.max_batch_sets]
-            padded_m = self.placement.padded_size(chunk.shape[0])
-            if padded_m != chunk.shape[0]:
-                pad = padded_m - chunk.shape[0]
-                chunk = np.pad(chunk, ((0, pad), (0, 0)), mode="edge")
-                wchunk = np.pad(wchunk, (0, pad))  # weight-0 padding rows
-            acc = self.placement.coverage_dispatch(self._state, chunk, wchunk)
-            # mesh placements may pad the word axis; the pad words carry no
-            # record bits, so slicing back to n_words is lossless
-            total += np.asarray(acc)[:, : self.n_words].astype(np.int64)
+        with _obs_span("coverage.accumulate", sets=m):
+            for s in range(0, m, self.max_batch_sets):
+                chunk = sets[s : s + self.max_batch_sets]
+                wchunk = wt[s : s + self.max_batch_sets]
+                padded_m = self.placement.padded_size(chunk.shape[0])
+                if padded_m != chunk.shape[0]:
+                    pad = padded_m - chunk.shape[0]
+                    chunk = np.pad(chunk, ((0, pad), (0, 0)), mode="edge")
+                    wchunk = np.pad(wchunk, (0, pad))  # weight-0 padding rows
+                _COV_BATCHES.inc()
+                acc = self.placement.coverage_dispatch(self._state, chunk, wchunk)
+                # mesh placements may pad the word axis; the pad words carry
+                # no record bits, so slicing back to n_words is lossless
+                total += np.asarray(acc)[:, : self.n_words].astype(np.int64)
         return total
 
     def record_counts(

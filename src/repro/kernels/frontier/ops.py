@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.exec_cache import exec_family
+from ...obs import metrics as _om
 from ..intersect.ops import next_bucket
 from . import frontier as _f
 from .frontier import SENTINEL, pack_params
@@ -61,10 +62,17 @@ def table_pad(t: int, minimum: int = 16) -> int:
     return p
 
 
+_LEVEL_TABLES = _om.counter(
+    "repro_frontier_tables_total",
+    "Per-level frontier id/key tables built for device candidate generation.",
+)
+
+
 def make_level_tables(itemsets: np.ndarray, n_symbols: int):
     """Host-side per-level prep for the device frontier: the padded id table
     and the packed sorted parent key table (both tiny next to the bitsets —
     ``(t, k)`` ints, uploaded once per level by the placement)."""
+    _LEVEL_TABLES.inc()
     t, k = itemsets.shape
     tp = table_pad(t)
     ids = np.zeros((tp, k), dtype=np.int32)

@@ -58,6 +58,23 @@ import jax.numpy as jnp
 
 from . import intersect as _k
 from . import ref as _ref
+from ...obs import metrics as _om
+
+_PIPE_BATCHES = _om.counter(
+    "repro_intersect_batches_total",
+    "Pair batches dispatched through the level pipeline.",
+    ("mode",),
+)
+_PIPE_PAIRS = _om.counter(
+    "repro_intersect_pairs_total",
+    "Pairs dispatched through the level pipeline (padding included for "
+    "mode=padded).",
+    ("mode",),
+)
+_LEVELS_RETIRED = _om.counter(
+    "repro_intersect_levels_retired_total",
+    "Level residencies eagerly retired by the driver.",
+)
 from .ref import CLASS_EMIT, CLASS_SKIP, CLASS_STORE
 
 __all__ = [
@@ -545,6 +562,7 @@ class LevelPipeline:
         instead of every parent level mined so far."""
         state, self._state = self._state, None
         if state is not None:
+            _LEVELS_RETIRED.inc()
             release = getattr(self.placement, "release", None)
             if release is not None:
                 release(state)
@@ -558,6 +576,8 @@ class LevelPipeline:
         ``result()``'s strip; ``raw()`` exposes the padded placement-native
         outputs for device-side partitioning.
         """
+        _PIPE_BATCHES.inc(mode="padded")
+        _PIPE_PAIRS.inc(int(pairs.shape[0]), mode="padded")
         child_d, cnt_d, cls_d = self.placement.dispatch(self._state, pairs, write_children)
         n_words = self.n_words
 
@@ -579,6 +599,8 @@ class LevelPipeline:
             out = (child, np.zeros(0, dtype=np.int64), classes)
             return BatchHandle(lambda: out)
 
+        _PIPE_BATCHES.inc(mode="host")
+        _PIPE_PAIRS.inc(m, mode="host")
         pairs = np.ascontiguousarray(pairs, dtype=np.int32)
         order = inverse = None
         if self.locality_sort:

@@ -24,6 +24,15 @@ Endpoints (JSON in / JSON out):
                                                            (WAL replay / job resume) or while
                                                            the device circuit breaker is open
   POST /cancel   {"tau": 1, "kmax": 3}                  -> cancel in-flight matching runs
+  GET  /metrics                                         -> Prometheus text exposition
+                                                           (auth-gated, backpressure-exempt)
+  GET  /trace?n=10 | /trace?id=TRACE_ID                 -> recent mining-trace span trees
+
+Request correlation: every data route runs under a trace. Clients may send
+``X-Trace-Id``; the id (incoming or freshly minted) is echoed in the
+``X-Trace-Id`` response header and as ``"trace_id"`` in JSON bodies, and the
+span tree is retrievable at ``GET /trace?id=...``. ``--log-json`` switches
+logs to one-JSON-object-per-line carrying the same ``trace_id``.
 
 ``source`` in the /mine response is "cold", "incremental" or "cache" — the
 CI smoke job asserts a repeated query comes back "cache". A ``deadline_s``
@@ -56,11 +65,17 @@ import os
 import signal
 import sys
 import threading
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
 
 import numpy as np
 
+from ..obs import logs as obs_logs
+from ..obs import metrics as _om
+from ..obs.trace import TRACER as _obs_tracer
+from ..obs.trace import current_trace_id as _current_trace_id
+from ..obs.trace import span as _obs_span
 from ..service import (
     DeadlineExceeded,
     IncrementalConfig,
@@ -69,6 +84,31 @@ from ..service import (
 )
 
 __all__ = ["make_server", "main"]
+
+_log = obs_logs.get_logger()
+
+# routes are a small fixed set, so route is a safe label; anything else is
+# bucketed as "other" to bound cardinality against path scanning
+_KNOWN_ROUTES = frozenset(
+    {"/append", "/mine", "/report", "/risk", "/anonymize", "/stats",
+     "/cancel", "/healthz", "/readyz", "/metrics", "/trace"}
+)
+# data routes run under a trace; probes and the obs endpoints themselves
+# don't (a scrape must never displace a mining trace in the ring buffer)
+_TRACED_ROUTES = frozenset(
+    {"/append", "/mine", "/report", "/risk", "/anonymize", "/cancel"}
+)
+
+_HTTP_REQUESTS = _om.counter(
+    "repro_http_requests_total",
+    "HTTP requests served by route and status code.",
+    ("route", "code"),
+)
+_HTTP_LATENCY = _om.histogram(
+    "repro_http_request_seconds",
+    "Wall time spent handling one HTTP request.",
+    labelnames=("route",),
+)
 
 
 def _mine_params(payload: dict) -> dict:
@@ -86,6 +126,8 @@ class MinerHandler(BaseHTTPRequestHandler):
     inflight: threading.BoundedSemaphore | None = None
     http_stats: dict  # shared counters, bound by make_server
     _stats_lock = threading.Lock()
+    _trace_id: str | None = None  # per-request, set by _run
+    _last_code: int = 0
 
     def log_message(self, fmt, *args):  # noqa: D102
         if not self.quiet:
@@ -96,9 +138,24 @@ class MinerHandler(BaseHTTPRequestHandler):
             self.http_stats[key] = self.http_stats.get(key, 0) + 1
 
     def _send(self, code: int, payload: dict) -> None:
+        if self._trace_id and isinstance(payload, dict):
+            payload.setdefault("trace_id", self._trace_id)
         body = json.dumps(payload).encode()
+        self._last_code = code
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        if self._trace_id:
+            self.send_header("X-Trace-Id", self._trace_id)
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_text(self, code: int, text: str,
+                   content_type: str = "text/plain; version=0.0.4; charset=utf-8") -> None:
+        body = text.encode("utf-8")
+        self._last_code = code
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
         self.wfile.write(body)
@@ -133,6 +190,15 @@ class MinerHandler(BaseHTTPRequestHandler):
         if not self._authorized():
             self._count("unauthorized")
             self._send(401, {"error": "missing or invalid bearer token"})
+            return
+        if route == "/metrics":
+            # backpressure-exempt: a saturated server is exactly when the
+            # scrape matters most (still auth-gated — internals leak here)
+            self._count("scrapes")
+            self._send_text(200, _om.REGISTRY.render())
+            return
+        if route == "/trace":
+            self._handle_trace(payload)
             return
         if self.inflight is not None and not self.inflight.acquire(blocking=False):
             self._count("rejected")
@@ -173,12 +239,17 @@ class MinerHandler(BaseHTTPRequestHandler):
             code = 499 if resp.source == "partial" else 200
             if code == 499:
                 self._count("deadline_exceeded")
-            self._send(
-                code,
-                resp.to_json(
-                    max_itemsets=int(max_itemsets) if max_itemsets is not None else None
-                ),
-            )
+            # itemset decode + JSON encode is real wall time on a cold mine;
+            # span it so the trace tree accounts for the full request
+            with _obs_span("http.respond"):
+                self._send(
+                    code,
+                    resp.to_json(
+                        max_itemsets=int(max_itemsets)
+                        if max_itemsets is not None
+                        else None
+                    ),
+                )
         elif route == "/cancel":
             self._send(
                 200,
@@ -205,6 +276,24 @@ class MinerHandler(BaseHTTPRequestHandler):
         else:
             self._send(404, {"error": f"unknown route {route}"})
 
+    def _handle_trace(self, payload: dict) -> None:
+        trace_id = payload.get("id")
+        if trace_id:
+            trace = _obs_tracer.get(str(trace_id))
+            if trace is None:
+                self._send(404, {"error": f"no stored trace {trace_id!r}"})
+                return
+            self._send(200, {"trace": trace.to_dict()})
+            return
+        n = int(payload.get("n", 10))
+        self._send(
+            200,
+            {
+                "traces": [t.to_dict() for t in _obs_tracer.last(n)],
+                "tracer": _obs_tracer.stats(),
+            },
+        )
+
     def _run(self, payload: dict) -> None:
         try:
             self._handle(payload)
@@ -218,8 +307,36 @@ class MinerHandler(BaseHTTPRequestHandler):
         except Exception as e:  # service must survive bad requests
             self._send(500, {"error": f"{type(e).__name__}: {e}"})
 
+    def _serve(self, payload: dict) -> None:
+        route = urlparse(self.path).path
+        t0 = time.perf_counter()
+        self._trace_id = None
+        if route in _TRACED_ROUTES:
+            incoming = self.headers.get("X-Trace-Id") or None
+            with _obs_tracer.start(
+                "http " + route, trace_id=incoming, meta={"route": route}
+            ) as sp:
+                # sampled-out requests still echo a client-supplied id so
+                # upstream correlation survives sampling
+                self._trace_id = _current_trace_id() or incoming
+                self._run(payload)
+                sp.set(code=self._last_code)
+        else:
+            self._run(payload)
+        dt = time.perf_counter() - t0
+        label = route if route in _KNOWN_ROUTES else "other"
+        _HTTP_REQUESTS.inc(route=label, code=str(self._last_code))
+        _HTTP_LATENCY.observe(dt, route=label)
+        # probes poll constantly; keep them out of info-level access logs
+        log = _log.debug if route in ("/healthz", "/readyz") else _log.info
+        log(
+            "%s %s %d %.1fms", self.command, route, self._last_code, dt * 1e3,
+            extra={"route": label, "code": self._last_code,
+                   "duration_ms": round(dt * 1e3, 2)},
+        )
+
     def do_GET(self):  # noqa: N802
-        self._run(self._query())
+        self._serve(self._query())
 
     def do_POST(self):  # noqa: N802
         try:
@@ -227,7 +344,7 @@ class MinerHandler(BaseHTTPRequestHandler):
         except Exception as e:
             self._send(400, {"error": f"{type(e).__name__}: {e}"})
             return
-        self._run(payload)
+        self._serve(payload)
 
 
 def make_server(
@@ -295,7 +412,25 @@ def main() -> None:
     ap.add_argument("--m", type=int, default=10, help="--preload randomized columns")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--log-level", default="info",
+                    choices=["debug", "info", "warning", "error"],
+                    help="minimum level for structured logs")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit logs as one JSON object per line (with "
+                         "trace_id correlation)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="wrap cold mines in jax.profiler and dump xplane "
+                         "traces into this directory")
+    ap.add_argument("--trace-max", type=int, default=64,
+                    help="ring-buffer size for finished traces (GET /trace)")
+    ap.add_argument("--trace-sample", type=int, default=1,
+                    help="trace 1 in N requests (1 = every request)")
     args = ap.parse_args()
+
+    obs_logs.setup(level=args.log_level, json_mode=args.log_json)
+    _obs_tracer.configure(
+        max_traces=args.trace_max, sample_every=args.trace_sample
+    )
 
     placement = None
     if args.mesh:
@@ -315,6 +450,7 @@ def main() -> None:
         wal_dir=args.wal_dir,
         snapshot_every=args.snapshot_every,
         incremental=IncrementalConfig(max_delta_fraction=args.max_delta_fraction),
+        profile_dir=args.profile_dir,
     )
     if args.preload == "randomized":
         from ..data.synth import randomized_dataset
@@ -338,15 +474,15 @@ def main() -> None:
         max_inflight=args.max_inflight or None,
     )
     store = service._store
-    print(
-        f"serve_miner on http://{args.host}:{args.port} "
-        f"(placement={service.placement.describe()}, "
-        f"rows={store.n_rows if store else 0}, "
-        f"items={store.n_items if store else 0}, "
-        f"auth={'on' if args.auth_token else 'off'}, "
-        f"max_inflight={args.max_inflight or 'unbounded'}, "
-        f"wal={args.wal_dir or 'off'})",
-        flush=True,
+    _log.info(
+        "serve_miner on http://%s:%d (placement=%s, rows=%d, items=%d, "
+        "auth=%s, max_inflight=%s, wal=%s, profile=%s)",
+        args.host, args.port, service.placement.describe(),
+        store.n_rows if store else 0, store.n_items if store else 0,
+        "on" if args.auth_token else "off",
+        args.max_inflight or "unbounded", args.wal_dir or "off",
+        args.profile_dir or "off",
+        extra={"event": "startup", "port": args.port},
     )
 
     # graceful shutdown: the server loop runs in a thread; the main thread
@@ -367,18 +503,19 @@ def main() -> None:
             pass
     except KeyboardInterrupt:
         pass
-    print("serve_miner draining...", flush=True)
+    _log.info("serve_miner draining...", extra={"event": "drain"})
     server.shutdown()
     thread.join()
     drain = service.drain(args.drain_timeout)
     snapshot = service.snapshot_store()
     server.server_close()
     service.close()
-    print(
-        f"serve_miner stopped (drained={drain['drained']}, "
-        f"abandoned={drain['abandoned']}, "
-        f"snapshot={'v%d' % snapshot if snapshot is not None else 'none'})",
-        flush=True,
+    _log.info(
+        "serve_miner stopped (drained=%d, abandoned=%d, snapshot=%s)",
+        drain["drained"], drain["abandoned"],
+        "v%d" % snapshot if snapshot is not None else "none",
+        extra={"event": "shutdown", "drained": drain["drained"],
+               "abandoned": drain["abandoned"]},
     )
     sys.exit(0)
 

@@ -1,0 +1,43 @@
+"""Unified observability substrate: metrics, traces, structured logs,
+profiling hooks.
+
+Three dependency-free (stdlib-only) primitives every layer of the miner
+records into, plus an opt-in profiler shim:
+
+* :mod:`repro.obs.metrics` — the process-wide registry of counters, gauges
+  and fixed-log-bucket histograms; rendered as Prometheus text on
+  ``GET /metrics`` and snapshotted (under one lock — never torn) into
+  ``/stats``.
+* :mod:`repro.obs.trace` — contextvar-propagated span trees per request
+  (``trace_id``/``span_id``/``parent_id``), threaded from the HTTP layer
+  through the scheduler into the level/batch loop and the placement
+  dispatch seams; last-N finished traces served by ``GET /trace``.
+* :mod:`repro.obs.logs` — structured (optionally JSON) logging carrying the
+  active ``trace_id``.
+* :mod:`repro.obs.profile` — ``jax.profiler`` xplane wrapping + device
+  gauges around a mine (imported lazily; everything else here must stay
+  importable without jax).
+
+Import discipline: this package is a **leaf** like ``core/exec_cache.py`` —
+``repro.core``, the kernels packages and ``repro.service`` all import it,
+so nothing in it may import from the rest of ``repro`` at module scope.
+"""
+
+from . import logs, metrics, trace
+from .metrics import REGISTRY, counter, gauge, histogram, lint_exposition
+from .trace import TRACER, current_trace_id, span, start_trace
+
+__all__ = [
+    "logs",
+    "metrics",
+    "trace",
+    "REGISTRY",
+    "TRACER",
+    "counter",
+    "gauge",
+    "histogram",
+    "lint_exposition",
+    "current_trace_id",
+    "span",
+    "start_trace",
+]

@@ -1,0 +1,109 @@
+"""Opt-in device profiling hooks around a mine.
+
+:func:`profile` wraps a mining run in ``jax.profiler.trace`` (when a dump
+directory is given — the xplane traces land there for TensorBoard /
+xprof, the same ``profiler=xplane`` idiom the MaxText-style launch scripts
+use) and records device-health gauges either way: executable-cache
+hit/miss deltas across the run, level retirements, the run's
+``peak_level_bytes``, and its wall time.
+
+Everything heavier than the stdlib is imported lazily inside the context
+manager, so ``repro.obs`` stays importable (and cheap) in processes that
+never profile.
+
+    from repro.obs import profile as obs_profile
+
+    with obs_profile.profile(dump_dir="/tmp/xplane") as prof:
+        result = service.mine(tau=1, kmax=4)
+        prof.set_result(result.result)
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+__all__ = ["profile", "ProfileRecord"]
+
+
+class ProfileRecord:
+    """Mutable handle the ``profile`` context yields; ``set_result`` feeds
+    the mined :class:`~repro.core.kyiv.MiningResult` so peak-memory and
+    retirement gauges reflect the profiled run."""
+
+    def __init__(self, dump_dir: str | None):
+        self.dump_dir = dump_dir
+        self.result = None
+        self.wall_s: float | None = None
+        self.exec_cache_delta: dict | None = None
+        self.profiler_active = False
+
+    def set_result(self, result) -> None:
+        self.result = result
+
+
+def _exec_totals():
+    from ..core import exec_cache
+
+    s = exec_cache.stats()
+    return {"hits": s["hits"], "misses": s["misses"], "entries": s["entries"]}
+
+
+@contextmanager
+def profile(dump_dir: str | None = None, *, registry=None):
+    """Profile one mine. ``dump_dir`` enables the ``jax.profiler`` xplane
+    trace; without it only the gauges are recorded. Never raises out of the
+    profiler itself — a broken/absent profiler degrades to gauges-only."""
+    from . import metrics as _m
+
+    reg = registry or _m.REGISTRY
+    g_wall = reg.gauge(
+        "repro_profile_last_wall_seconds", "Wall time of the last profiled mine."
+    )
+    g_cache = reg.gauge(
+        "repro_profile_exec_cache_delta",
+        "Executable-cache activity during the last profiled mine.",
+        ("event",),
+    )
+    g_peak = reg.gauge(
+        "repro_profile_peak_level_bytes",
+        "peak_level_bytes of the last profiled mine.",
+    )
+    g_levels = reg.gauge(
+        "repro_profile_levels_retired", "Levels mined by the last profiled mine."
+    )
+    c_runs = reg.counter(
+        "repro_profile_runs_total", "Profiled mines.", ("profiler",)
+    )
+
+    rec = ProfileRecord(dump_dir)
+    before = _exec_totals()
+    t0 = time.perf_counter()
+    cm = None
+    if dump_dir is not None:
+        try:
+            import jax
+
+            cm = jax.profiler.trace(dump_dir)
+            cm.__enter__()
+            rec.profiler_active = True
+        except Exception:
+            cm = None
+    try:
+        yield rec
+    finally:
+        if cm is not None:
+            try:
+                cm.__exit__(None, None, None)
+            except Exception:
+                pass
+        rec.wall_s = time.perf_counter() - t0
+        after = _exec_totals()
+        rec.exec_cache_delta = {k: after[k] - before[k] for k in after}
+        g_wall.set(rec.wall_s)
+        for event, delta in rec.exec_cache_delta.items():
+            g_cache.set(delta, event=event)
+        if rec.result is not None:
+            g_peak.set(getattr(rec.result, "peak_level_bytes", 0))
+            g_levels.set(len(getattr(rec.result, "stats", ())))
+        c_runs.inc(profiler="xplane" if rec.profiler_active else "off")

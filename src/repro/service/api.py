@@ -39,6 +39,10 @@ from ..core.kyiv import KyivConfig, MiningResult, RunControl, mine_preprocessed
 from ..core.placement import HostPlacement, is_device_failure, resolve_placement
 from ..core.preprocess import preprocess
 from ..core import exec_cache
+from ..obs import metrics as _om
+from ..obs.trace import TRACER as _obs_tracer
+from ..obs.trace import span as _obs_span
+from ..obs.trace import start_trace as _obs_start_trace
 from ..distributed.checkpoint import CheckpointManager
 from ..kernels.intersect import LevelPipeline
 from ..sdc.quasi import QuasiIdentifierReport, report_as_dict
@@ -58,6 +62,27 @@ __all__ = [
 ]
 
 _PREP_CACHE_CAPACITY = 8
+
+_MINE_REQUESTS = _om.counter(
+    "repro_service_mine_requests_total",
+    "Answered mine requests by answer source.",
+    ("source",),
+)
+_MINE_LATENCY = _om.histogram(
+    "repro_service_mine_latency_seconds",
+    "End-to-end mine request latency by answer source.",
+    ("source",),
+)
+_APPENDS = _om.counter(
+    "repro_service_appends_total", "Dataset append requests served."
+)
+_APPENDED_ROWS = _om.counter(
+    "repro_service_appended_rows_total", "Rows appended to the store."
+)
+_PREPROCESS_SECONDS = _om.histogram(
+    "repro_service_preprocess_seconds",
+    "Cold §4.1 preprocessing time (prep-cache misses only).",
+)
 
 
 class NotReadyError(RuntimeError):
@@ -173,6 +198,7 @@ class MiningService:
         fault_injector=None,
         resilience: ResilienceConfig | None = None,
         defer_recovery: bool = False,
+        profile_dir: str | None = None,
         **config_kw,
     ):
         self.config = config or KyivConfig(**config_kw)
@@ -227,6 +253,12 @@ class MiningService:
         self.device_retries = 0
         self.degraded_mines = 0
         self.resumed_jobs = 0
+        self.profile_dir = profile_dir
+        # scrape-time mirror of the component stats dicts into the one
+        # registry; named, so the newest service instance owns the slot
+        self._collector_fn = self._collect_metrics
+        _om.REGISTRY.register_collector("service", self._collector_fn)
+        exec_cache.publish_metrics()
         if not defer_recovery:
             self.recover()
 
@@ -284,15 +316,18 @@ class MiningService:
         rows = np.asarray(rows)
         if rows.ndim == 1:
             rows = rows[None, :]
-        if self._durable is not None:
-            version = self._durable.append(rows)
-            with self._lock:
-                self._store = self._durable.store
-        else:
-            with self._lock:
-                if self._store is None:
-                    self._store = DatasetStore(rows.shape[1], **self._store_kw)
-            version = self.store.append(rows)
+        with _obs_span("service.append", rows=int(rows.shape[0])):
+            if self._durable is not None:
+                version = self._durable.append(rows)
+                with self._lock:
+                    self._store = self._durable.store
+            else:
+                with self._lock:
+                    if self._store is None:
+                        self._store = DatasetStore(rows.shape[1], **self._store_kw)
+                version = self.store.append(rows)
+        _APPENDS.inc()
+        _APPENDED_ROWS.inc(int(rows.shape[0]))
         return {
             "version": version,
             "appended": int(rows.shape[0]),
@@ -314,9 +349,12 @@ class MiningService:
             if prep is not None:
                 self._preps.move_to_end(key)
                 return prep
-        prep = preprocess(
-            table, config.tau, ordering=config.ordering, seed=config.seed
-        )
+        t0 = time.perf_counter()
+        with _obs_span("mine.preprocess", version=version, tau=config.tau):
+            prep = preprocess(
+                table, config.tau, ordering=config.ordering, seed=config.seed
+            )
+        _PREPROCESS_SECONDS.observe(time.perf_counter() - t0)
         with self._lock:
             self._preps[key] = prep
             while len(self._preps) > _PREP_CACHE_CAPACITY:
@@ -433,6 +471,22 @@ class MiningService:
                 self.injector.check("mine.level_end")
 
         def run(cfg, factory):
+            if self.profile_dir:
+                # opt-in device profiling: xplane traces land under
+                # profile_dir and the repro_profile_* gauges record the run
+                from ..obs import profile as obs_profile
+
+                with obs_profile.profile(self.profile_dir) as prof:
+                    result = mine_preprocessed(
+                        prep,
+                        cfg,
+                        pipeline_factory=factory,
+                        on_level_end=on_level_end,
+                        resume_state=resume_state,
+                        control=control,
+                    )
+                    prof.set_result(result)
+                return result
             return mine_preprocessed(
                 prep,
                 cfg,
@@ -505,25 +559,27 @@ class MiningService:
             )
             if base is not None:
                 try:
-                    inc = mine_incremental(
-                        self.store,
-                        base.result,
-                        base.version,
-                        config,
-                        self.incremental,
-                        table=table,
-                        # seed expansion runs through this service's placement,
-                        # over the store's resident bitsets (None -> falls back
-                        # to a host snapshot gather; bit-identical either way).
-                        # Host placements skip the resident copy entirely.
-                        placement=self.placement,
-                        resident_bits=(
-                            self.store.device_bits(version)
-                            if self.placement.kind != "host"
-                            and self.incremental.enabled
-                            else None
-                        ),
-                    )
+                    with _obs_span("mine.incremental", base_version=base.version):
+                        inc = mine_incremental(
+                            self.store,
+                            base.result,
+                            base.version,
+                            config,
+                            self.incremental,
+                            table=table,
+                            # seed expansion runs through this service's
+                            # placement, over the store's resident bitsets
+                            # (None -> falls back to a host snapshot gather;
+                            # bit-identical either way). Host placements skip
+                            # the resident copy entirely.
+                            placement=self.placement,
+                            resident_bits=(
+                                self.store.device_bits(version)
+                                if self.placement.kind != "host"
+                                and self.incremental.enabled
+                                else None
+                            ),
+                        )
                 except Exception as exc:
                     if not is_device_failure(exc):
                         raise
@@ -537,7 +593,8 @@ class MiningService:
                     self.cache.put(entry)
                     return entry
 
-            result, info = self._mine_cold(key, table, config, control)
+            with _obs_span("mine.cold", version=version):
+                result, info = self._mine_cold(key, table, config, control)
             # per-level host-busy vs device-busy split of the last cold run —
             # the /stats view of what the device frontier buys per level
             self._last_mine_timing = {
@@ -581,51 +638,62 @@ class MiningService:
     ) -> MineResponse:
         self._require_ready()
         t0 = time.perf_counter()
-        # warm path first: a version read + dict lookup, no snapshot copy
-        version = self.store.version
-        key = make_key(version, tau, kmax, ordering)
-        entry = self.cache.get(key)
-        source = "cache"
-        if entry is None:
-            # miss: take the immutable snapshot the computation will run on
-            # (its version may have advanced past the first read — re-key)
-            version, table = self.store.snapshot()
+        # root of the request's span tree when called directly; a child span
+        # when the HTTP layer (or a planner re-mine) already opened a trace
+        with _obs_start_trace(
+            "service.mine", meta={"tau": int(tau), "kmax": int(kmax)}
+        ) as _tsp:
+            # warm path first: a version read + dict lookup, no snapshot copy
+            version = self.store.version
             key = make_key(version, tau, kmax, ordering)
-            control = (
-                RunControl.with_timeout(deadline_s)
-                if deadline_s is not None
-                else RunControl()
+            entry = self.cache.get(key)
+            source = "cache"
+            if entry is None:
+                # miss: take the immutable snapshot the computation will run
+                # on (its version may have advanced past the first read)
+                version, table = self.store.snapshot()
+                key = make_key(version, tau, kmax, ordering)
+                control = (
+                    RunControl.with_timeout(deadline_s)
+                    if deadline_s is not None
+                    else RunControl()
+                )
+                future = self.scheduler.submit(
+                    key, lambda: self._compute(key, table, control)
+                )
+                if deadline_s is None:
+                    entry = future.result()
+                else:
+                    # if this request coalesced onto an earlier run, that
+                    # run's control (not ours) governs it — bound the wait:
+                    # the run stops within one batch of *its* deadline, and a
+                    # deadline-free run releases us with DeadlineExceeded
+                    try:
+                        entry = future.result(
+                            timeout=deadline_s + self.deadline_grace_s
+                        )
+                    except FutureTimeoutError:
+                        _MINE_REQUESTS.inc(source="deadline")
+                        raise DeadlineExceeded(
+                            f"mine(tau={tau}, kmax={kmax}) exceeded "
+                            f"{deadline_s}s"
+                        ) from None
+                source = entry.source
+            self.served += 1
+            latency = time.perf_counter() - t0
+            _tsp.set(source=source, version=version)
+            _MINE_REQUESTS.inc(source=source)
+            _MINE_LATENCY.observe(latency, source=source)
+            return MineResponse(
+                version=version,
+                tau=tau,
+                kmax=kmax,
+                ordering=ordering,
+                source=source,
+                latency_s=latency,
+                result=entry.result,
+                info=dict(entry.info),
             )
-            future = self.scheduler.submit(
-                key, lambda: self._compute(key, table, control)
-            )
-            if deadline_s is None:
-                entry = future.result()
-            else:
-                # if this request coalesced onto an earlier run, that run's
-                # control (not ours) governs it — bound the wait instead:
-                # the run stops within one batch of *its* deadline, and a
-                # deadline-free run releases us here with DeadlineExceeded
-                try:
-                    entry = future.result(
-                        timeout=deadline_s + self.deadline_grace_s
-                    )
-                except FutureTimeoutError:
-                    raise DeadlineExceeded(
-                        f"mine(tau={tau}, kmax={kmax}) exceeded {deadline_s}s"
-                    ) from None
-            source = entry.source
-        self.served += 1
-        return MineResponse(
-            version=version,
-            tau=tau,
-            kmax=kmax,
-            ordering=ordering,
-            source=source,
-            latency_s=time.perf_counter() - t0,
-            result=entry.result,
-            info=dict(entry.info),
-        )
 
     # -- reports ------------------------------------------------------------
 
@@ -727,6 +795,111 @@ class MiningService:
 
     # -- observability ------------------------------------------------------
 
+    def _collect_metrics(self) -> None:
+        """Scrape-time mirror of component-local stats into the registry.
+
+        Runs under the registry lock, so it must only read values whose
+        writers never hold their own lock while recording registry metrics
+        (lock-ordering: component lock -> registry lock is forbidden for
+        anything read here; plain attribute reads are always safe).
+        """
+        reg = _om.REGISTRY
+        g = reg.gauge
+        c = reg.counter
+
+        c("repro_service_served_total", "Requests answered.").set_total(self.served)
+        c(
+            "repro_service_degraded_mines_total",
+            "Mines degraded to the host placement.",
+        ).set_total(self.degraded_mines)
+        c(
+            "repro_service_device_retries_total", "Device mine retries."
+        ).set_total(self.device_retries)
+        c(
+            "repro_service_resumed_jobs_total", "Mine jobs resumed at recovery."
+        ).set_total(self.resumed_jobs)
+        g("repro_service_ready", "1 when ready (recovered, breaker closed).").set(
+            1.0 if self.readiness()[0] else 0.0
+        )
+
+        cache = self.cache.stats()
+        g("repro_result_cache_entries", "Cached mining results.").set(cache["entries"])
+        g("repro_result_cache_bytes", "Approximate result-cache footprint.").set(
+            cache["bytes"]
+        )
+        c("repro_result_cache_hits_total", "Result-cache hits.").set_total(
+            cache["hits"]
+        )
+        c("repro_result_cache_misses_total", "Result-cache misses.").set_total(
+            cache["misses"]
+        )
+
+        priv = self._privacy.stats()
+        g("repro_privacy_cache_entries", "Cached privacy payloads.").set(
+            priv["entries"]
+        )
+        c("repro_privacy_cache_hits_total", "Privacy-LRU hits.").set_total(
+            priv["hits"]
+        )
+        c("repro_privacy_cache_misses_total", "Privacy-LRU misses.").set_total(
+            priv["misses"]
+        )
+
+        sched = self.scheduler.stats()
+        c("repro_scheduler_scheduled_total", "Runs scheduled.").set_total(
+            sched["scheduled"]
+        )
+        c(
+            "repro_scheduler_coalesced_total",
+            "Requests coalesced onto an in-flight run.",
+        ).set_total(sched["coalesced"])
+        c("repro_scheduler_failed_total", "Runs that raised.").set_total(
+            sched["failed"]
+        )
+        g("repro_scheduler_inflight", "Runs currently executing.").set(
+            sched["inflight"]
+        )
+
+        br = self.breaker.stats()
+        g(
+            "repro_breaker_open",
+            "1 while the circuit breaker rejects the device path.",
+        ).set(1.0 if br["state"] == "open" else 0.0)
+        g(
+            "repro_breaker_consecutive_failures",
+            "Consecutive device failures recorded.",
+        ).set(br["consecutive_failures"])
+
+        store = self._store
+        if store is not None:
+            st = store.stats()
+            g("repro_store_version", "Current dataset version.").set(st["version"])
+            g("repro_store_rows", "Rows in the store.").set(st["n_rows"])
+            g("repro_store_items", "Distinct items in the store.").set(
+                st["n_items"]
+            )
+            g("repro_store_bitset_bytes", "Resident bitset bytes.").set(
+                st["bitset_bytes"]
+            )
+            c("repro_store_compactions_total", "Store compactions.").set_total(
+                st["compactions"]
+            )
+
+        durable = self._durable
+        if durable is not None:
+            # plain attribute reads only — DurableStore's lock is held while
+            # WAL metrics record, so taking it here would invert lock order
+            g(
+                "repro_store_snapshots_taken", "Snapshots taken (this store)."
+            ).set(durable.snapshots_taken)
+
+        ts = _obs_tracer.stats()
+        c("repro_traces_started_total", "Traces started.").set_total(ts["started"])
+        c(
+            "repro_traces_sampled_out_total", "Traces dropped by sampling."
+        ).set_total(ts["sampled_out"])
+        g("repro_traces_stored", "Traces in the ring buffer.").set(ts["stored"])
+
     def stats(self) -> dict:
         store = self._store
         ready, reason = self.readiness()
@@ -751,15 +924,20 @@ class MiningService:
                 max_retries=self.resilience.max_retries,
             ),
             "drain": self._drain_info,
-            "store": {
-                "version": store.version if store else 0,
-                "n_rows": store.n_rows if store else 0,
-                "n_items": store.n_items if store else 0,
-                "n_words": store.n_words if store else 0,
-                "word_tile": store.word_tile if store else self.word_tile,
-                "bitset_bytes": store.nbytes() if store else 0,
-                "compactions": store.compactions if store else 0,
-            },
+            # one locked read — an in-flight append can't tear this section
+            "store": (
+                store.stats()
+                if store
+                else {
+                    "version": 0,
+                    "n_rows": 0,
+                    "n_items": 0,
+                    "n_words": 0,
+                    "word_tile": self.word_tile,
+                    "bitset_bytes": 0,
+                    "compactions": 0,
+                }
+            ),
             "placement": self.placement.describe(),
             "cache": self.cache.stats(),
             "privacy": self._privacy.stats(),
@@ -771,6 +949,14 @@ class MiningService:
             # per-level timing split of the most recent cold mine (host
             # candidate/classify work vs device dispatch+sync)
             "last_mine": self._last_mine_timing,
+            # registry fold-in: every metric family in one consistent
+            # (single-lock) snapshot, plus the tracer's ring-buffer state.
+            # The sections above keep their historical shapes; this is the
+            # one place new telemetry lands without reshaping them.
+            "obs": {
+                "metrics": _om.REGISTRY.snapshot(),
+                "traces": _obs_tracer.stats(),
+            },
         }
 
     def compact(self, keep_versions: int | None = None) -> dict:
@@ -811,3 +997,6 @@ class MiningService:
         self.scheduler.shutdown()
         if self._durable is not None:
             self._durable.close()
+        # drop the scrape collector only if this instance still owns the
+        # slot (a newer service may have replaced it)
+        _om.REGISTRY.unregister_collector("service", self._collector_fn)

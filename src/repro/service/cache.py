@@ -22,8 +22,17 @@ import time
 from collections import OrderedDict
 
 from ..core.kyiv import MiningResult
+from ..obs import metrics as _om
 
 __all__ = ["CacheKey", "CacheEntry", "ResultCache", "make_key"]
+
+# process-wide event counter beside the per-instance hit/miss attributes
+# (tests assert on fresh-instance counts; /stats keeps the instance view)
+_CACHE_REQUESTS = _om.counter(
+    "repro_result_cache_requests_total",
+    "Result-cache lookups by outcome.",
+    ("outcome",),
+)
 
 CacheKey = tuple  # (version, tau, kmax, ordering)
 
@@ -89,11 +98,12 @@ class ResultCache:
             entry = self._entries.get(key)
             if entry is None:
                 self.misses += 1
-                return None
-            self._entries.move_to_end(key)
-            self.hits += 1
-            entry.hits += 1
-            return entry
+            else:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                entry.hits += 1
+        _CACHE_REQUESTS.inc(outcome="miss" if entry is None else "hit")
+        return entry
 
     def put(self, entry: CacheEntry) -> None:
         nbytes = entry.nbytes()

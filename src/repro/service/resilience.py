@@ -20,7 +20,18 @@ import threading
 import time
 from typing import Callable
 
+from ..obs import metrics as _om
+
 __all__ = ["ResilienceConfig", "CircuitBreaker"]
+
+# process-wide beside the per-instance ``trips`` attribute (chaos tests
+# assert on fresh-instance counts; /stats keeps the instance view)
+_BREAKER_TRIPS = _om.counter(
+    "repro_breaker_trips_total", "Circuit-breaker opens across all services."
+)
+_BREAKER_FAILURES = _om.counter(
+    "repro_breaker_failures_total", "Device failures recorded by breakers."
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,12 +77,19 @@ class CircuitBreaker:
             self._opened_at = None
 
     def record_failure(self) -> None:
+        _BREAKER_FAILURES.inc()
+        tripped = False
         with self._lock:
             self._failures += 1
             if self._failures >= self.failure_threshold:
                 if self._opened_at is None:
                     self.trips += 1
+                    tripped = True
                 self._opened_at = self._clock()
+        if tripped:
+            # outside the breaker lock: the registry's scrape collectors read
+            # breaker.stats() under the registry lock (reverse order)
+            _BREAKER_TRIPS.inc()
 
     def stats(self) -> dict:
         with self._lock:

@@ -15,6 +15,7 @@ distinct requests queue FIFO rather than thrash it.
 
 from __future__ import annotations
 
+import contextvars
 import threading
 import time
 from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
@@ -44,7 +45,11 @@ class RequestScheduler:
             if future is not None:
                 self.coalesced += 1
                 return future
-            future = self._pool.submit(fn)
+            # carry the submitter's context (the active obs trace span) across
+            # the worker-thread hop, so the run's spans join the request's
+            # trace tree; coalesced waiters ride the first submitter's trace
+            ctx = contextvars.copy_context()
+            future = self._pool.submit(ctx.run, fn)
             self._inflight[key] = future
             self.scheduled += 1
 

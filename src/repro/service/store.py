@@ -148,6 +148,21 @@ class DatasetStore:
     def nbytes(self) -> int:
         return self._bits.nbytes
 
+    def stats(self) -> dict:
+        """One locked read of every ``/stats`` store field — an in-flight
+        append can't tear the view (version bumped but n_rows not yet, a
+        row count from one version and a byte count from another)."""
+        with self._lock:
+            return {
+                "version": self.version,
+                "n_rows": self.n_rows,
+                "n_items": self._n_items,
+                "n_words": self._n_words,
+                "word_tile": self.word_tile,
+                "bitset_bytes": self._bits.nbytes,
+                "compactions": self.compactions,
+            }
+
     # -- growth -------------------------------------------------------------
 
     def _grow(self, items_needed: int, words_needed: int) -> None:

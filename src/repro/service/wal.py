@@ -38,15 +38,45 @@ import os
 import pickle
 import struct
 import threading
+import time
 import zlib
 
 import numpy as np
 
 from ..distributed.checkpoint import CheckpointManager
+from ..obs import metrics as _om
+from ..obs.trace import span as _obs_span
 from .faults import NULL_INJECTOR, FaultInjector
 from .store import DatasetStore
 
 __all__ = ["WriteAheadLog", "DurableStore"]
+
+_WAL_APPENDS = _om.counter(
+    "repro_wal_appends_total", "Durably fsync'd WAL frames."
+)
+_WAL_BYTES = _om.counter(
+    "repro_wal_bytes_written_total", "WAL frame bytes written (incl. header)."
+)
+_WAL_FSYNC = _om.histogram(
+    "repro_wal_append_seconds", "Frame+fsync latency of one WAL append."
+)
+_WAL_TRUNCATED = _om.counter(
+    "repro_wal_truncated_bytes_total",
+    "Torn-tail bytes dropped during WAL replay.",
+)
+_SNAPSHOTS = _om.counter(
+    "repro_store_snapshots_total", "Durable store snapshots taken."
+)
+_SNAPSHOT_SECONDS = _om.histogram(
+    "repro_store_snapshot_seconds", "Snapshot (export+checkpoint+reset) time."
+)
+_RECOVERIES = _om.counter(
+    "repro_store_recoveries_total", "Durable store recoveries completed."
+)
+_REPLAYED = _om.counter(
+    "repro_wal_records_replayed_total",
+    "WAL records re-applied during recovery.",
+)
 
 MAGIC = b"KWAL"
 _HEADER = struct.Struct("<4sII")  # magic, crc32(payload), len(payload)
@@ -68,7 +98,8 @@ class WriteAheadLog:
         """Frame, write, fsync. Returns only once the record is durable."""
         payload = pickle.dumps(record, protocol=pickle.HIGHEST_PROTOCOL)
         frame = _HEADER.pack(MAGIC, zlib.crc32(payload), len(payload)) + payload
-        with self._lock:
+        t0 = time.perf_counter()
+        with self._lock, _obs_span("wal.append", bytes=len(frame)):
             action = self.injector.check("wal.append")
             if action == "partial":
                 # simulate a power cut mid-write: half the frame reaches the
@@ -83,6 +114,11 @@ class WriteAheadLog:
             self._fh.flush()
             os.fsync(self._fh.fileno())
             self.appended += 1
+        # durable appends only — a simulated torn write never acks, so it
+        # never counts (the client-visible contract the metrics mirror)
+        _WAL_APPENDS.inc()
+        _WAL_BYTES.inc(len(frame))
+        _WAL_FSYNC.observe(time.perf_counter() - t0)
 
     def replay(self) -> list[dict]:
         """Decode the longest valid prefix; a corrupt/truncated tail is
@@ -107,6 +143,7 @@ class WriteAheadLog:
                 good_end = off
             self.truncated_bytes = len(data) - good_end
             if self.truncated_bytes:
+                _WAL_TRUNCATED.inc(self.truncated_bytes)
                 self._truncate_locked(good_end)
         return records
 
@@ -191,7 +228,8 @@ class DurableStore:
         Order matters: the snapshot commits (atomic rename) *before* the
         WAL resets, so a crash in between merely replays records the
         snapshot already holds — replay skips them by version."""
-        with self._lock:
+        t0 = time.perf_counter()
+        with self._lock, _obs_span("store.snapshot"):
             if self.store is None:
                 return None
             state = self.store.export_state()
@@ -204,7 +242,12 @@ class DurableStore:
             self.wal.reset()
             self._since_snapshot = 0
             self.snapshots_taken += 1
-            return self.store.version
+            version = self.store.version
+        # metrics outside the store lock: scrape collectors read stats()
+        # under the registry lock (reverse acquisition order)
+        _SNAPSHOTS.inc()
+        _SNAPSHOT_SECONDS.observe(time.perf_counter() - t0)
+        return version
 
     def recover(self) -> dict:
         """Rebuild the store from newest intact snapshot + WAL replay.
@@ -212,7 +255,7 @@ class DurableStore:
         Returns an info dict (snapshot version, records replayed/skipped,
         torn-tail bytes truncated) for ``/stats`` and logs.
         """
-        with self._lock:
+        with self._lock, _obs_span("store.recover"):
             state, _meta = self.snapshots.restore()
             snapshot_version = 0
             if state is not None:
@@ -238,6 +281,8 @@ class DurableStore:
                     )
                 replayed += 1
             self._since_snapshot = replayed
+            _RECOVERIES.inc()
+            _REPLAYED.inc(replayed)
             return {
                 "snapshot_version": snapshot_version,
                 "replayed": replayed,

@@ -626,7 +626,8 @@ def test_http_readyz_and_deadline(http_service):
     code, m = _req(port, "/mine", {"tau": 1, "kmax": 4})
     assert code == 200 and m["source"] == "cold"
     code, c = _req(port, "/cancel", {"tau": 1, "kmax": 4})
-    assert code == 200 and c == {"cancelled": 0}
+    # data routes also carry the request-correlation trace_id
+    assert code == 200 and c["cancelled"] == 0 and "trace_id" in c
 
 
 def test_http_readyz_not_ready_returns_503():
