@@ -33,6 +33,7 @@ BENCHES = [
     ("fig13", "bench_fig13_parallel"),
     ("fused", "bench_fused_pipeline"),
     ("service", "bench_service"),
+    ("sampling", "bench_sampling"),
     ("roofline", "bench_roofline"),
 ]
 

@@ -77,6 +77,13 @@ class SharedExecutableCache:
     def family(self, name: str) -> "FamilyCache":
         return FamilyCache(self, name)
 
+    def keys(self, family: str) -> list[tuple]:
+        """The bound executable keys of one family — lets callers pad new
+        dispatches to bucket sizes that already have executables (the
+        sampling tier's boundary recount reuses warm buckets this way)."""
+        with self._lock:
+            return [k for fam, k in self._fns if fam == family]
+
     def family_stats(self, name: str) -> dict:
         with self._lock:
             entries = sum(1 for fam, _ in self._fns if fam == name)
@@ -127,6 +134,9 @@ class FamilyCache:
 
     def get(self, key: tuple, builder: Callable[[], Any]):
         return self._shared.get(self.name, key, builder)
+
+    def keys(self) -> list[tuple]:
+        return self._shared.keys(self.name)
 
     def stats(self) -> dict:
         return self._shared.family_stats(self.name)

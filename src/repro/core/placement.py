@@ -174,6 +174,17 @@ class BitsetPlacement(Protocol):
         """Batch size ``m`` padded to this placement's executable bucket."""
         ...
 
+    def warm_buckets(
+        self, n_words: int, *, fused: bool, write_children: bool
+    ) -> tuple[int, ...]:
+        """Bucket sizes with an already-bound intersect executable for this
+        placement signature at ``n_words`` words, ascending — empty when
+        dispatch has no per-bucket executables (host eager, mesh
+        shape-polymorphic). The sampling tier pads boundary recounts to
+        these so refinement hits warm executables instead of minting new
+        single-use buckets."""
+        ...
+
     def dispatch(self, state: Any, padded_pairs: np.ndarray, write_children: bool):
         """Execute one padded batch; returns ``(child | None, counts,
         classes | None)`` as placement-native arrays (numpy or device;
@@ -247,6 +258,11 @@ class HostPlacement:
 
     def padded_size(self, m: int, *, pad_buckets: bool = True) -> int:
         return m  # host gathers have no executable buckets to reuse
+
+    def warm_buckets(
+        self, n_words: int, *, fused: bool, write_children: bool
+    ) -> tuple[int, ...]:
+        return ()
 
     def dispatch(self, state, padded_pairs: np.ndarray, write_children: bool):
         _count_dispatch("dispatch", "host")
@@ -358,6 +374,29 @@ class DevicePlacement:
 
     def padded_size(self, m: int, *, pad_buckets: bool = True) -> int:
         return _ops.next_bucket(m) if pad_buckets else m
+
+    def warm_buckets(
+        self, n_words: int, *, fused: bool, write_children: bool
+    ) -> tuple[int, ...]:
+        # this placement's dispatch keys are the 10-tuples built below;
+        # keep the positional reads in lockstep with that key layout
+        buckets = set()
+        for key in _ops.EXEC_CACHE.keys():
+            if (
+                len(key) == 10
+                and key[0] == self.engine
+                and key[1] == self.indexed
+                and key[2] == fused
+                and key[3] == write_children
+                and key[4] == n_words
+                and isinstance(key[5], int)
+                and key[6] == self.block_pairs
+                and key[7] == self.block_words
+                and key[8] == self.interpret
+                and key[9] == self.donate
+            ):
+                buckets.add(int(key[5]))
+        return tuple(sorted(buckets))
 
     def dispatch(self, state, padded_pairs: np.ndarray, write_children: bool):
         _guard("dispatch")
@@ -605,6 +644,13 @@ class MeshPlacement:
         bucket = _ops.next_bucket(m) if pad_buckets else m
         padded_m, _ = balanced_blocks(bucket, self.pair_shards)
         return padded_m
+
+    def warm_buckets(
+        self, n_words: int, *, fused: bool, write_children: bool
+    ) -> tuple[int, ...]:
+        # mesh step fns are shape-polymorphic jits keyed by variant only —
+        # there is no per-bucket executable to chase
+        return ()
 
     def dispatch(self, state, padded_pairs, write_children: bool):
         _guard("dispatch", "mesh")

@@ -13,6 +13,12 @@ Endpoints (JSON in / JSON out):
   POST /mine     {"tau": 1, "kmax": 3, "ordering": "ascending",
                   "max_itemsets": 100}                  -> itemsets + source
   GET  /mine?tau=1&kmax=3                               -> same, query form
+  GET  /mine?tau=1&kmax=3&mode=approx&epsilon=0.1       -> ε-confident sampled
+                                                           answer: scaled counts +
+                                                           confidence/epsilon/seed/
+                                                           boundary_count in "info";
+                                                           exact refinement runs in
+                                                           the background
   GET  /report?tau=1&kmax=3                             -> sdc quasi-id report
   GET  /risk?tau=1&kmax=3&top=10                        -> per-record risk profile
   GET  /anonymize?tau=1&kmax=3                          -> verified masking plan
@@ -37,7 +43,10 @@ logs to one-JSON-object-per-line carrying the same ``trace_id``.
 ``source`` in the /mine response is "cold", "incremental" or "cache" — the
 CI smoke job asserts a repeated query comes back "cache". A ``deadline_s``
 on /mine bounds the request: an exceeded deadline returns ``499`` with the
-partial result mined so far (``"source": "partial"``).
+partial result mined so far (``"source": "partial"``). With
+``mode=approx`` the source is "approx" (sample-mined), "refined" (already
+promoted to exact) or "cache"; ``/stats`` carries a ``sampling`` section
+with the derived sampler seed and refinement counters.
 
 Durability (``--wal-dir DIR``): appends are WAL-logged and fsync'd before
 itemization, snapshots fold the log every ``--snapshot-every`` appends, and
@@ -230,9 +239,18 @@ class MinerHandler(BaseHTTPRequestHandler):
         elif route == "/mine":
             max_itemsets = payload.get("max_itemsets")
             deadline_s = payload.get("deadline_s")
+            mode = str(payload.get("mode", "exact"))
+            if mode not in ("exact", "approx"):
+                self._send(
+                    400, {"error": f"mode must be 'exact' or 'approx', got {mode!r}"}
+                )
+                return
+            epsilon = payload.get("epsilon")
             resp = self.service.mine(
                 **_mine_params(payload),
                 deadline_s=float(deadline_s) if deadline_s is not None else None,
+                mode=mode,
+                epsilon=float(epsilon) if epsilon is not None else None,
             )
             # 499 (client-timeout convention): the run stopped at a batch
             # boundary; the body still carries the valid partial answer

@@ -1,0 +1,138 @@
+"""Exact boundary-band recount for the sampled-mining fast path.
+
+The sample mine classifies every emitted itemset as *certain* or
+*boundary* (``sampler.classify_counts``); refinement resolves the
+boundary band by recounting those itemsets against the full table. The
+recount dispatches through the same placement / ``LevelPipeline`` /
+``EXEC_CACHE`` machinery as a real mine, not a private numpy loop, for
+two reasons:
+
+* bit-identical semantics under every placement (host, device, mesh) —
+  the recount is just AND + popcount cascades over the full-width word
+  tiles;
+* executable reuse. Device executables are keyed by ``(…, n_words,
+  bucket, …)``: the sample mine's buckets live at the *sample's* word
+  count and can never serve the full table, so a naive recount would
+  mint a fresh single-use bucket per batch size. Instead the recount
+  pads its pair batches to a bucket size already bound for the full
+  table's signature (``BitsetPlacement.warm_buckets``) — warmed by the
+  exact promotion mine, by prior exact requests, or by earlier recounts
+  — so refinements register as hits in ``/stats.executables`` instead
+  of growing the cache.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.items import ItemTable, bits_popcount
+from ..kernels.intersect import LevelPipeline
+from ..kernels.intersect.ops import _pad_pairs, next_bucket
+from ..obs import metrics as _om
+
+__all__ = ["recount_supports", "pick_bucket"]
+
+_RECOUNT_BUCKETS = _om.counter(
+    "repro_sampling_recount_buckets_total",
+    "Boundary-recount dispatches by executable-bucket outcome.",
+    ("outcome",),
+)
+_RECOUNT_SETS = _om.counter(
+    "repro_sampling_recounted_itemsets_total",
+    "Boundary itemsets recounted exactly against the full table.",
+)
+
+# don't chase a warm bucket that would multiply the dispatch width past
+# this factor of the natural power-of-two bucket — padding work is real
+_MAX_BUCKET_STRETCH = 4
+
+
+def pick_bucket(
+    placement, m: int, n_words: int, *, fused: bool, write_children: bool
+) -> tuple[int, bool]:
+    """Choose the dispatch bucket for ``m`` recount pairs.
+
+    Prefers the smallest already-warm executable bucket for this
+    placement signature that fits ``m`` (within a bounded stretch);
+    falls back to the standard power-of-two bucket. Returns
+    ``(bucket, was_warm)``.
+    """
+    natural = next_bucket(m)
+    for b in placement.warm_buckets(
+        n_words, fused=fused, write_children=write_children
+    ):
+        if m <= b <= natural * _MAX_BUCKET_STRETCH:
+            return int(b), True
+    return natural, False
+
+
+def recount_supports(
+    table: ItemTable,
+    itemsets: list[tuple[int, ...]],
+    *,
+    placement,
+    tau: int,
+    fused_classify: bool = True,
+) -> tuple[np.ndarray, dict]:
+    """Exact full-table supports for ``itemsets`` (tuples of item ids).
+
+    Cascades pairwise ANDs through a :class:`LevelPipeline` per arity
+    group: partials for ``(i0, …, i_{p})`` are intersected with column
+    ``p+1``'s bitsets in one padded batch. Returns ``(counts, info)``
+    with ``counts`` aligned to ``itemsets`` order and ``info`` recording
+    the executable-bucket reuse achieved.
+    """
+    counts = np.zeros(len(itemsets), dtype=np.int64)
+    info = {"recounted": len(itemsets), "bucket_hits": 0, "bucket_misses": 0,
+            "dispatches": 0}
+    if not itemsets:
+        return counts, info
+
+    by_arity: dict[int, list[int]] = {}
+    for pos, ids in enumerate(itemsets):
+        by_arity.setdefault(len(ids), []).append(pos)
+
+    for arity, positions in sorted(by_arity.items()):
+        if arity == 1:
+            items = np.fromiter(
+                (itemsets[p][0] for p in positions), dtype=np.int64
+            )
+            counts[positions] = table.freq[items]
+            continue
+        mat = np.asarray([itemsets[p] for p in positions], dtype=np.int64)
+        r = mat.shape[0]
+        partial = table.bits[mat[:, 0]]
+        for pos in range(1, arity):
+            stacked = np.concatenate([partial, table.bits[mat[:, pos]]], axis=0)
+            write = pos < arity - 1
+            pipe = LevelPipeline(
+                stacked,
+                bits_popcount(stacked).astype(np.int64),
+                tau=tau,
+                placement=placement,
+                fused_classify=fused_classify,
+                locality_sort=False,
+            )
+            pairs = np.stack(
+                [np.arange(r), np.arange(r) + r], axis=1
+            ).astype(np.int32)
+            if placement.kind == "device":
+                bucket, warm = pick_bucket(
+                    placement, r, int(stacked.shape[1]),
+                    fused=fused_classify, write_children=write,
+                )
+                handle = pipe.submit_padded(_pad_pairs(pairs, bucket), r, write)
+                outcome = "hit" if warm else "miss"
+                info["bucket_hits" if warm else "bucket_misses"] += 1
+                _RECOUNT_BUCKETS.inc(outcome=outcome)
+            else:
+                handle = pipe.submit(pairs, write)
+            info["dispatches"] += 1
+            child, batch_counts, _ = handle.result()
+            pipe.retire()
+            if write:
+                partial = child
+            else:
+                counts[positions] = batch_counts
+    _RECOUNT_SETS.inc(len(itemsets))
+    return counts, info

@@ -14,8 +14,9 @@ death, ``resilience`` degrades device failures to the host placement behind
 a circuit breaker, and ``faults`` is the chaos-test injection harness.
 """
 
+from ..sampling import SamplingConfig
 from .api import DeadlineExceeded, MineResponse, MiningService, NotReadyError
-from .cache import CacheEntry, ResultCache, make_key
+from .cache import CacheEntry, ResultCache, make_approx_key, make_key
 from .faults import DeviceFault, FaultInjector, KillPoint, placement_faults
 from .incremental import IncrementalConfig, delta_support, mine_incremental
 from .resilience import CircuitBreaker, ResilienceConfig
@@ -39,8 +40,10 @@ __all__ = [
     "RequestScheduler",
     "ResilienceConfig",
     "ResultCache",
+    "SamplingConfig",
     "WriteAheadLog",
     "delta_support",
+    "make_approx_key",
     "make_key",
     "mine_incremental",
     "placement_faults",

@@ -45,8 +45,10 @@ from ..obs.trace import span as _obs_span
 from ..obs.trace import start_trace as _obs_start_trace
 from ..distributed.checkpoint import CheckpointManager
 from ..kernels.intersect import LevelPipeline
+from ..sampling import SamplingConfig, build_sample, classify_counts
+from ..sampling.refine import recount_supports
 from ..sdc.quasi import QuasiIdentifierReport, report_as_dict
-from .cache import CacheEntry, ResultCache, make_key
+from .cache import CacheEntry, ResultCache, make_approx_key, make_key
 from .faults import NULL_INJECTOR
 from .incremental import IncrementalConfig, mine_incremental
 from .resilience import CircuitBreaker, ResilienceConfig
@@ -82,6 +84,31 @@ _APPENDED_ROWS = _om.counter(
 _PREPROCESS_SECONDS = _om.histogram(
     "repro_service_preprocess_seconds",
     "Cold §4.1 preprocessing time (prep-cache misses only).",
+)
+_SAMPLING_MINES = _om.counter(
+    "repro_sampling_mines_total",
+    "Approx mine requests answered, by answer source.",
+    ("source",),
+)
+_SAMPLING_SAMPLE_SECONDS = _om.histogram(
+    "repro_sampling_sample_mine_seconds",
+    "Sample-mine wall time (sampling + preprocess + level mining).",
+)
+_SAMPLING_SAMPLE_ROWS = _om.histogram(
+    "repro_sampling_sample_rows", "Rows drawn per sample mine."
+)
+_SAMPLING_BOUNDARY = _om.counter(
+    "repro_sampling_boundary_itemsets_total",
+    "Sample-mined itemsets classified into the undecidable boundary band.",
+)
+_SAMPLING_REFINEMENTS = _om.counter(
+    "repro_sampling_refinements_total",
+    "Background exact refinements, by outcome.",
+    ("status",),
+)
+_SAMPLING_REFINE_SECONDS = _om.histogram(
+    "repro_sampling_refine_seconds",
+    "Background refinement wall time (boundary recount + exact promotion).",
 )
 
 
@@ -199,6 +226,7 @@ class MiningService:
         resilience: ResilienceConfig | None = None,
         defer_recovery: bool = False,
         profile_dir: str | None = None,
+        sampling: SamplingConfig | None = None,
         **config_kw,
     ):
         self.config = config or KyivConfig(**config_kw)
@@ -253,6 +281,18 @@ class MiningService:
         self.device_retries = 0
         self.degraded_mines = 0
         self.resumed_jobs = 0
+        self.sampling = sampling or SamplingConfig()
+        # plain-int counters + a last-request snapshot dict: written under
+        # self._lock, read lock-free by /stats and the scrape collector
+        self._sampling_stats = {
+            "approx_served": 0,
+            "sampled_mines": 0,
+            "refinements": 0,
+            "refine_failures": 0,
+            "recount_bucket_hits": 0,
+            "recount_bucket_misses": 0,
+            "last": None,
+        }
         self.profile_dir = profile_dir
         # scrape-time mirror of the component stats dicts into the one
         # registry; named, so the newest service instance owns the slot
@@ -635,7 +675,16 @@ class MiningService:
         kmax: int = 3,
         ordering: str = "ascending",
         deadline_s: float | None = None,
+        mode: str = "exact",
+        epsilon: float | None = None,
     ) -> MineResponse:
+        if mode not in ("exact", "approx"):
+            raise ValueError(f"mode must be 'exact' or 'approx', got {mode!r}")
+        if mode == "approx":
+            return self._mine_approx(
+                tau, kmax, ordering, deadline_s,
+                self.sampling.epsilon if epsilon is None else float(epsilon),
+            )
         self._require_ready()
         t0 = time.perf_counter()
         # root of the request's span tree when called directly; a child span
@@ -694,6 +743,271 @@ class MiningService:
                 result=entry.result,
                 info=dict(entry.info),
             )
+
+    # -- sampled (approximate) mining ---------------------------------------
+
+    def _mine_approx(
+        self,
+        tau: int,
+        kmax: int,
+        ordering: str,
+        deadline_s: float | None,
+        epsilon: float,
+    ) -> MineResponse:
+        """The ε-confident fast path: mine a deterministic uniform sample,
+        answer immediately with per-itemset confidence, and schedule a
+        background refinement that recounts the boundary band and promotes
+        the cache entry to the exact answer."""
+        self._require_ready()
+        if not (0.0 < epsilon < 1.0):
+            raise ValueError(f"epsilon must be in (0, 1), got {epsilon}")
+        t0 = time.perf_counter()
+        with _obs_start_trace(
+            "service.mine",
+            meta={"tau": int(tau), "kmax": int(kmax), "mode": "approx"},
+        ) as _tsp:
+            version = self.store.version
+            akey = make_approx_key(version, tau, kmax, ordering, epsilon)
+            entry = self.cache.get(akey)
+            if entry is None:
+                # an already-promoted exact answer at this version is
+                # strictly better than re-sampling — serve it as-is
+                entry = self.cache.get(make_key(version, tau, kmax, ordering))
+            source = "cache"
+            if entry is None:
+                version, table = self.store.snapshot()
+                akey = make_approx_key(version, tau, kmax, ordering, epsilon)
+                future = self.scheduler.submit(
+                    akey, lambda: self._compute_approx(akey, table)
+                )
+                if deadline_s is None:
+                    entry = future.result()
+                else:
+                    try:
+                        entry = future.result(
+                            timeout=deadline_s + self.deadline_grace_s
+                        )
+                    except FutureTimeoutError:
+                        _SAMPLING_MINES.inc(source="deadline")
+                        raise DeadlineExceeded(
+                            f"mine(tau={tau}, kmax={kmax}, mode=approx) "
+                            f"exceeded {deadline_s}s"
+                        ) from None
+                source = entry.source
+            self.served += 1
+            with self._lock:
+                self._sampling_stats["approx_served"] += 1
+            latency = time.perf_counter() - t0
+            _tsp.set(source=source, version=version, mode="approx")
+            _MINE_REQUESTS.inc(source="approx")
+            _SAMPLING_MINES.inc(source=source)
+            _MINE_LATENCY.observe(latency, source="approx")
+            info = dict(entry.info)
+            if "mode" not in info:
+                # exact entry answering an approx request: full confidence
+                info.update(
+                    mode="approx", epsilon=float(epsilon), confidence=1.0,
+                    boundary_count=0, refined=True,
+                )
+            return MineResponse(
+                version=version,
+                tau=tau,
+                kmax=kmax,
+                ordering=ordering,
+                source=source,
+                latency_s=latency,
+                result=entry.result,
+                info=info,
+            )
+
+    def _compute_approx(self, key: tuple, table: ItemTable) -> CacheEntry:
+        """Sample-mine one snapshot (scheduler-side of an approx request).
+
+        Mines the ε-sized sample with the standard level pipeline (same
+        placement/engine as exact requests — the sampled table's word axis
+        is padded for it), classifies every emitted itemset into certain
+        vs boundary, caches the scaled-estimate answer under the approx
+        key, and schedules the background refinement under the *exact* key
+        so concurrent exact requests coalesce onto the promotion run."""
+        entry = self.cache.get(key)
+        if entry is not None:
+            return entry
+        version, tau, kmax, ordering = key[0], key[1], key[2], key[3]
+        epsilon = float(key[5])
+        t0 = time.perf_counter()
+        with _obs_span(
+            "mine.sample", version=version, tau=int(tau), epsilon=epsilon
+        ):
+            plan = build_sample(
+                table,
+                version=version,
+                tau=tau,
+                epsilon=epsilon,
+                config=self.sampling,
+                word_tile=int(getattr(self.placement, "store_word_tile", 1) or 1),
+            )
+            config = dataclasses.replace(
+                self._request_config(tau, kmax, ordering), tau=plan.tau_sample
+            )
+            prep = preprocess(
+                plan.table, plan.tau_sample, ordering=ordering, seed=config.seed
+            )
+            sample_result = mine_preprocessed(prep, config)
+            raw = np.asarray(
+                [cnt for _, cnt in sample_result.itemsets], dtype=np.int64
+            )
+            est, boundary = classify_counts(
+                raw,
+                tau=int(tau),
+                epsilon=epsilon,
+                n_rows=plan.n_rows_full,
+                n_sample=int(plan.rows.shape[0]),
+            )
+            itemsets = [
+                (ids, int(e))
+                for (ids, _), e in zip(sample_result.itemsets, est)
+            ]
+            boundary_sets = [
+                ids
+                for (ids, _), b in zip(sample_result.itemsets, boundary)
+                if b
+            ]
+            result = dataclasses.replace(sample_result, itemsets=itemsets)
+            n_total = len(itemsets)
+            info = {
+                "mode": "approx",
+                "epsilon": epsilon,
+                "confidence": (
+                    1.0 if not n_total
+                    else (n_total - len(boundary_sets)) / n_total
+                ),
+                "boundary_count": len(boundary_sets),
+                "seed": plan.seed,
+                "sample_rows": int(plan.rows.shape[0]),
+                "n_rows": plan.n_rows_full,
+                "tau_sample": plan.tau_sample,
+                "scale": plan.scale,
+                "refined": False,
+            }
+            entry = CacheEntry(key=key, result=result, source="approx", info=info)
+            self.cache.put(entry)
+        sample_s = time.perf_counter() - t0
+        _SAMPLING_SAMPLE_SECONDS.observe(sample_s)
+        _SAMPLING_SAMPLE_ROWS.observe(int(plan.rows.shape[0]))
+        _SAMPLING_BOUNDARY.inc(len(boundary_sets))
+        with self._lock:
+            ss = self._sampling_stats
+            ss["sampled_mines"] += 1
+            ss["last"] = {
+                "version": int(version),
+                "tau": int(tau),
+                "kmax": int(kmax),
+                "epsilon": epsilon,
+                "seed": plan.seed,
+                "sample_rows": int(plan.rows.shape[0]),
+                "boundary_count": len(boundary_sets),
+                "confidence": info["confidence"],
+                "sample_mine_s": sample_s,
+            }
+        ekey = make_key(version, tau, kmax, ordering)
+        self.scheduler.submit(
+            ekey, lambda: self._refine(key, ekey, table, boundary_sets)
+        )
+        return entry
+
+    def _refine(
+        self,
+        akey: tuple,
+        ekey: tuple,
+        table: ItemTable,
+        boundary_sets: list[tuple[int, ...]],
+    ) -> CacheEntry:
+        """Background refinement of one approx answer, in two stages.
+
+        Stage 1 recounts the boundary band exactly against the full table
+        (padded to warm executable buckets — see ``sampling.refine``) and
+        re-caches the approx entry with those counts resolved. Stage 2
+        promotes to the bit-exact answer through the standard ``_compute``
+        path, so job checkpoints, retries/degradation and request
+        coalescing all apply — a crash mid-promotion leaves a level
+        checkpoint that restart recovery resumes. Runs under the exact
+        cache key: concurrent exact requests coalesce onto this run and
+        receive the returned exact entry."""
+        version, tau, kmax, ordering = ekey
+        t0 = time.perf_counter()
+        status = "ok"
+        try:
+            with _obs_span(
+                "mine.refine",
+                version=int(version),
+                tau=int(tau),
+                boundary=len(boundary_sets),
+            ):
+                base = self.cache.get(akey)
+                if boundary_sets and base is not None:
+                    counts, rinfo = recount_supports(
+                        table,
+                        boundary_sets,
+                        placement=self.placement,
+                        tau=int(tau),
+                        fused_classify=self.config.fused_classify,
+                    )
+                    exact_of = dict(
+                        zip(boundary_sets, (int(c) for c in counts))
+                    )
+                    kept = []
+                    for ids, est in base.result.itemsets:
+                        exact = exact_of.get(ids)
+                        if exact is None:
+                            kept.append((ids, est))
+                        elif exact <= tau:
+                            kept.append((ids, exact))
+                        # else: boundary itemset proven frequent — drop it
+                    result = dataclasses.replace(base.result, itemsets=kept)
+                    info = dict(
+                        base.info,
+                        boundary_count=0,
+                        recount=rinfo,
+                        refined="recount",
+                    )
+                    self.cache.put(
+                        CacheEntry(
+                            key=akey, result=result, source="approx", info=info
+                        )
+                    )
+                    with self._lock:
+                        ss = self._sampling_stats
+                        ss["recount_bucket_hits"] += rinfo["bucket_hits"]
+                        ss["recount_bucket_misses"] += rinfo["bucket_misses"]
+                entry = self._compute(ekey, table)
+                if entry.source != "partial":
+                    base = self.cache.get(akey)
+                    info = dict(
+                        base.info if base is not None else {},
+                        confidence=1.0,
+                        boundary_count=0,
+                        refined=True,
+                        promoted=True,
+                    )
+                    self.cache.put(
+                        CacheEntry(
+                            key=akey,
+                            result=entry.result,
+                            source="refined",
+                            info=info,
+                        )
+                    )
+                return entry
+        except BaseException:
+            status = "error"
+            raise
+        finally:
+            _SAMPLING_REFINEMENTS.inc(status=status)
+            _SAMPLING_REFINE_SECONDS.observe(time.perf_counter() - t0)
+            with self._lock:
+                self._sampling_stats["refinements"] += 1
+                if status == "error":
+                    self._sampling_stats["refine_failures"] += 1
 
     # -- reports ------------------------------------------------------------
 
@@ -893,6 +1207,26 @@ class MiningService:
                 "repro_store_snapshots_taken", "Snapshots taken (this store)."
             ).set(durable.snapshots_taken)
 
+        ss = self._sampling_stats
+        c(
+            "repro_sampling_approx_served_total",
+            "Approx mine requests answered.",
+        ).set_total(ss["approx_served"])
+        c(
+            "repro_sampling_refine_failures_total",
+            "Background refinements that raised.",
+        ).set_total(ss["refine_failures"])
+        last = ss["last"]
+        if last is not None:
+            g(
+                "repro_sampling_last_confidence",
+                "Certain fraction of the most recent sample mine.",
+            ).set(last["confidence"])
+            g(
+                "repro_sampling_last_sample_rows",
+                "Rows drawn by the most recent sample mine.",
+            ).set(last["sample_rows"])
+
         ts = _obs_tracer.stats()
         c("repro_traces_started_total", "Traces started.").set_total(ts["started"])
         c(
@@ -939,6 +1273,19 @@ class MiningService:
                 }
             ),
             "placement": self.placement.describe(),
+            # the sampled-mining fast path: request/refinement counters,
+            # the reproducibility surface (derived seed, ε, sample size) of
+            # the most recent sample mine, and boundary-recount bucket reuse
+            "sampling": dict(
+                self._sampling_stats,
+                config={
+                    "epsilon": self.sampling.epsilon,
+                    "delta": self.sampling.delta,
+                    "oversample": self.sampling.oversample,
+                    "min_rows": self.sampling.min_rows,
+                    "seed": self.sampling.seed,
+                },
+            ),
             "cache": self.cache.stats(),
             "privacy": self._privacy.stats(),
             "scheduler": self.scheduler.stats(),

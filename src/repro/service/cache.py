@@ -24,7 +24,13 @@ from collections import OrderedDict
 from ..core.kyiv import MiningResult
 from ..obs import metrics as _om
 
-__all__ = ["CacheKey", "CacheEntry", "ResultCache", "make_key"]
+__all__ = [
+    "CacheKey",
+    "CacheEntry",
+    "ResultCache",
+    "make_key",
+    "make_approx_key",
+]
 
 # process-wide event counter beside the per-instance hit/miss attributes
 # (tests assert on fresh-instance counts; /stats keeps the instance view)
@@ -34,18 +40,38 @@ _CACHE_REQUESTS = _om.counter(
     ("outcome",),
 )
 
-CacheKey = tuple  # (version, tau, kmax, ordering)
+CacheKey = tuple  # (version, tau, kmax, ordering) — exact entries only
 
 
 def make_key(version: int, tau: int, kmax: int, ordering: str) -> CacheKey:
     return (int(version), int(tau), int(kmax), str(ordering))
 
 
+def make_approx_key(
+    version: int, tau: int, kmax: int, ordering: str, epsilon: float
+) -> CacheKey:
+    """Cache key of a sampled (ε-approximate) answer.
+
+    Deliberately a different key *shape* (6-tuple, with ε folded in): an
+    approx entry must never be confused with — or returned in place of —
+    the exact entry at the same parameters, and :meth:`ResultCache.
+    latest_base` skips non-4-tuple keys, so approx entries can never
+    serve as incremental recount bases."""
+    return (
+        int(version),
+        int(tau),
+        int(kmax),
+        str(ordering),
+        "approx",
+        round(float(epsilon), 9),
+    )
+
+
 @dataclasses.dataclass
 class CacheEntry:
     key: CacheKey
     result: MiningResult
-    source: str  # "cold" | "incremental" | "partial"
+    source: str  # "cold" | "incremental" | "partial" | "approx" | "refined"
     info: dict
     created_at: float = dataclasses.field(default_factory=time.time)
     hits: int = 0
@@ -137,6 +163,10 @@ class ResultCache:
         best: CacheEntry | None = None
         with self._lock:
             for entry in self._entries.values():
+                if len(entry.key) != 4:
+                    # approx/refined entries (make_approx_key) are scaled
+                    # estimates — never a base to recount exactly against
+                    continue
                 v, t, k, o = entry.key
                 if (t, k, o) == (tau, kmax, ordering) and v < before_version:
                     if best is None or v > best.version:

@@ -21,5 +21,6 @@ except ImportError:
         "test_kyiv.py",
         "test_preprocess.py",
         "test_privacy_prop.py",
+        "test_sampling_prop.py",
         "test_support.py",
     ]

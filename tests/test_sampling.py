@@ -1,0 +1,504 @@
+"""Sampled-mining fast path: sampler kernels, confidence classifier,
+boundary recount, service/HTTP integration, and the chaos case.
+
+The cross-engine convergence property sweep lives in
+tests/test_sampling_prop.py (hypothesis); here are the deterministic
+contracts: the word-tile sample gather vs an unpackbits reference, the
+(version, ε, seed) reproducibility surface, exact boundary recounts vs
+brute force on every engine, warm executable-bucket reuse, the approx →
+refine → bit-identical-promotion lifecycle, and kill-mid-refinement →
+restart → converge.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import KyivConfig, itemize, mine
+from repro.core.items import WORD_BITS, bits_popcount
+from repro.obs import metrics as om
+from repro.sampling import (
+    SamplingConfig,
+    build_sample,
+    classify_counts,
+    derive_seed,
+    gather_sample_bits,
+    sample_item_table,
+    sample_rows,
+    sample_size,
+    scaled_tau,
+)
+from repro.sampling.refine import recount_supports
+from repro.service import (
+    FaultInjector,
+    KillPoint,
+    MiningService,
+    make_approx_key,
+    make_key,
+)
+from repro.service.cache import CacheEntry, ResultCache
+
+
+def _rand(seed, n, m, dom=5):
+    return np.random.default_rng(seed).integers(0, dom, size=(n, m))
+
+
+def _canonical(result):
+    return sorted((tuple(sorted(ids)), int(c)) for ids, c in result.itemsets)
+
+
+# a bound small enough that mid-sized test tables are strictly subsampled
+SMALL = SamplingConfig(oversample=1.0, min_rows=64)
+
+
+# ---------------------------------------------------------------------------
+# sampler kernels
+# ---------------------------------------------------------------------------
+
+
+def test_gather_sample_bits_matches_unpackbits_reference():
+    table = itemize(_rand(0, 333, 4, 5))
+    rows = sample_rows(333, 100, seed=3)
+    got = gather_sample_bits(table.bits, rows, word_tile=4)
+
+    full = np.unpackbits(
+        table.bits.view(np.uint8), axis=1, bitorder="little"
+    )[:, :333]
+    got_bits = np.unpackbits(
+        got.view(np.uint8), axis=1, bitorder="little"
+    )
+    assert got.shape[1] % 4 == 0
+    np.testing.assert_array_equal(got_bits[:, : len(rows)], full[:, rows])
+    # padding words beyond the sample are zero
+    assert not got_bits[:, len(rows):].any()
+
+
+def test_gather_sample_bits_empty_and_identity():
+    table = itemize(_rand(1, 70, 3, 4))
+    empty = gather_sample_bits(table.bits, np.array([], dtype=np.int64))
+    assert empty.shape == (table.n_items, 1) and not empty.any()
+    ident = gather_sample_bits(table.bits, np.arange(70), word_tile=1)
+    np.testing.assert_array_equal(ident, table.bits[:, : ident.shape[1]])
+
+
+def test_sample_rows_sorted_unique_and_identity():
+    rows = sample_rows(1000, 100, seed=7)
+    assert rows.shape == (100,)
+    assert (np.diff(rows) > 0).all()
+    assert rows.min() >= 0 and rows.max() < 1000
+    np.testing.assert_array_equal(sample_rows(50, 80, seed=7), np.arange(50))
+    # deterministic in the seed
+    np.testing.assert_array_equal(rows, sample_rows(1000, 100, seed=7))
+
+
+def test_derive_seed_reproducible_per_tuple():
+    s = derive_seed(3, 0.1, 0)
+    assert s == derive_seed(3, 0.1, 0)
+    assert s != derive_seed(4, 0.1, 0)
+    assert s != derive_seed(3, 0.2, 0)
+    assert s != derive_seed(3, 0.1, 1)
+
+
+def test_sample_size_bound():
+    assert sample_size(10**6, 8, 0.1) < 10**6  # genuinely sub-linear
+    assert sample_size(100, 8, 0.1) == 100  # clamped to the table
+    cfg = SamplingConfig(min_rows=512)
+    assert sample_size(10**6, 2, 0.9, config=cfg) == 512  # floored
+    # inverse in epsilon, increasing in column count
+    assert sample_size(10**9, 8, 0.05) > sample_size(10**9, 8, 0.1)
+    assert sample_size(10**9, 16, 0.1) > sample_size(10**9, 8, 0.1)
+    with pytest.raises(ValueError):
+        sample_size(1000, 8, 0.0)
+
+
+def test_sample_item_table_matches_itemize_of_subset():
+    data = _rand(2, 200, 3, 4)
+    table = itemize(data)
+    rows = sample_rows(200, 64, seed=5)
+    st = sample_item_table(table, rows, word_tile=2)
+    ref = itemize(data[rows])
+
+    assert st.n_rows == 64
+    assert st.n_words % 2 == 0
+    np.testing.assert_array_equal(st.value, table.value)
+    np.testing.assert_array_equal(st.col, table.col)
+    np.testing.assert_array_equal(bits_popcount(st.bits), st.freq)
+
+    ref_by_cv = {
+        (int(ref.col[i]), int(ref.value[i])): (
+            int(ref.freq[i]), int(ref.min_row[i]),
+        )
+        for i in range(ref.n_items)
+    }
+    for i in range(st.n_items):
+        cv = (int(st.col[i]), int(st.value[i]))
+        if cv in ref_by_cv:
+            assert (int(st.freq[i]), int(st.min_row[i])) == ref_by_cv[cv]
+        else:  # item absent from the sample keeps its id at frequency 0
+            assert int(st.freq[i]) == 0
+            assert int(st.min_row[i]) == np.iinfo(np.int64).max
+
+
+def test_scaled_tau_and_classifier_bands():
+    # floor(10 * 1.1 * 100/1000) = 1
+    assert scaled_tau(10, 0.1, 1000, 100) == 1
+    assert scaled_tau(1, 0.5, 10**6, 100) == 1  # floored at 1
+    assert scaled_tau(7, 0.1, 500, 500) == 7  # full sample: unscaled
+
+    est, boundary = classify_counts(
+        np.array([0, 1, 2]), tau=10, epsilon=0.1, n_rows=1000, n_sample=100
+    )
+    np.testing.assert_array_equal(est, [0, 10, 20])
+    # certain at est <= tau*(1-eps) = 9; boundary anywhere above
+    np.testing.assert_array_equal(boundary, [False, True, True])
+
+    est, boundary = classify_counts(
+        np.array([3, 11]), tau=10, epsilon=0.1, n_rows=100, n_sample=100
+    )
+    np.testing.assert_array_equal(est, [3, 11])  # full sample: exact
+    assert not boundary.any()
+
+
+def test_build_sample_deterministic_per_version():
+    table = itemize(_rand(3, 400, 4, 5))
+    a = build_sample(table, version=1, tau=2, epsilon=0.1, config=SMALL)
+    b = build_sample(table, version=1, tau=2, epsilon=0.1, config=SMALL)
+    assert a.seed == b.seed
+    np.testing.assert_array_equal(a.rows, b.rows)
+    np.testing.assert_array_equal(a.table.bits, b.table.bits)
+    assert 0 < a.rows.shape[0] < 400  # strict subsample at this config
+    c = build_sample(table, version=2, tau=2, epsilon=0.1, config=SMALL)
+    assert c.seed != a.seed
+
+
+# ---------------------------------------------------------------------------
+# exact boundary recount (every engine, warm buckets)
+# ---------------------------------------------------------------------------
+
+
+def _brute_counts(table, itemsets):
+    out = []
+    for ids in itemsets:
+        acc = np.bitwise_and.reduce(table.bits[list(ids)], axis=0)
+        out.append(int(bits_popcount(acc[None, :])[0]))
+    return np.array(out, dtype=np.int64)
+
+
+@pytest.mark.parametrize("engine", ["numpy", "jnp", "pallas"])
+def test_recount_supports_matches_bruteforce(engine):
+    data = _rand(4, 150, 4, 4)
+    svc = MiningService.from_dataset(data, engine=engine, interpret=True)
+    table = svc.store.item_table()
+    per_col = {}
+    for i in range(table.n_items):
+        per_col.setdefault(int(table.col[i]), []).append(i)
+    cols = sorted(per_col)
+    itemsets = [
+        (per_col[cols[0]][0],),
+        (per_col[cols[0]][1],),
+        (per_col[cols[0]][0], per_col[cols[1]][0]),
+        (per_col[cols[0]][1], per_col[cols[1]][1]),
+        (per_col[cols[0]][0], per_col[cols[1]][0], per_col[cols[2]][0]),
+        (per_col[cols[0]][1], per_col[cols[1]][0], per_col[cols[3]][1]),
+    ]
+    counts, info = recount_supports(
+        table, itemsets, placement=svc.placement, tau=2
+    )
+    np.testing.assert_array_equal(counts, _brute_counts(table, itemsets))
+    assert info["recounted"] == len(itemsets)
+    # arity-2 batch (1 dispatch) + arity-3 cascade (2 dispatches)
+    assert info["dispatches"] == 3
+    svc.close()
+
+
+def test_recount_empty_is_noop():
+    svc = MiningService.from_dataset(_rand(5, 60, 3, 4))
+    counts, info = recount_supports(
+        svc.store.item_table(), [], placement=svc.placement, tau=1
+    )
+    assert counts.shape == (0,) and info["dispatches"] == 0
+    svc.close()
+
+
+def test_recount_reuses_warm_buckets_on_device():
+    svc = MiningService.from_dataset(_rand(6, 120, 4, 4), engine="jnp")
+    table = svc.store.item_table()
+    per_col = {}
+    for i in range(table.n_items):
+        per_col.setdefault(int(table.col[i]), []).append(i)
+    cols = sorted(per_col)
+    itemsets = [
+        (per_col[cols[0]][j], per_col[cols[1]][k])
+        for j in range(2)
+        for k in range(2)
+    ]
+    _, first = recount_supports(
+        table, itemsets, placement=svc.placement, tau=2
+    )
+    # first recount minted (or found) its buckets; an identical batch shape
+    # must now run entirely on warm executables
+    assert svc.placement.warm_buckets(
+        table.n_words, fused=True, write_children=False
+    )
+    _, second = recount_supports(
+        table, itemsets, placement=svc.placement, tau=2
+    )
+    assert second["bucket_misses"] == 0
+    assert second["bucket_hits"] == second["dispatches"] > 0
+    svc.close()
+
+
+def test_host_and_mesh_have_no_bucket_cache():
+    svc = MiningService.from_dataset(_rand(7, 80, 3, 4))
+    assert svc.placement.warm_buckets(svc.store.n_words, fused=True,
+                                      write_children=False) == ()
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# service lifecycle: approx -> refine -> promoted exact
+# ---------------------------------------------------------------------------
+
+
+def test_approx_mine_refines_to_exact(tmp_path):
+    data = _rand(8, 900, 5, 6)
+    cold = mine(data, KyivConfig(tau=3, kmax=3))
+    svc = MiningService.from_dataset(data, sampling=SMALL)
+
+    r = svc.mine(tau=3, kmax=3, mode="approx")
+    assert r.source == "approx"
+    info = r.info
+    assert info["mode"] == "approx" and info["epsilon"] == 0.1
+    assert info["refined"] is False
+    assert 0.0 <= info["confidence"] <= 1.0
+    assert info["sample_rows"] == sample_size(900, 5, 0.1, config=SMALL)
+    assert info["seed"] == derive_seed(svc.store.version, 0.1, SMALL.seed)
+    assert info["boundary_count"] >= 0
+
+    drained = svc.scheduler.drain(timeout=120)
+    assert drained["abandoned"] == 0
+
+    r2 = svc.mine(tau=3, kmax=3, mode="approx")
+    assert r2.source == "cache"
+    assert r2.info["refined"] is True and r2.info["confidence"] == 1.0
+    assert _canonical(r2.result) == _canonical(cold)
+
+    # the promotion also populated the exact key: an exact request is warm
+    assert svc.mine(tau=3, kmax=3).source == "cache"
+
+    ss = svc.stats()["sampling"]
+    assert ss["approx_served"] == 2
+    assert ss["sampled_mines"] == 1
+    assert ss["refinements"] == 1 and ss["refine_failures"] == 0
+    assert ss["last"]["seed"] == info["seed"]
+    assert ss["config"]["epsilon"] == 0.1
+
+    text = om.render()
+    for family in (
+        "repro_sampling_mines_total",
+        "repro_sampling_refinements_total",
+        "repro_sampling_sample_mine_seconds",
+        "repro_sampling_recounted_itemsets_total",
+    ):
+        assert family in text, family
+    svc.close()
+
+
+def test_approx_requests_coalesce_on_one_key():
+    # same (version, epsilon) -> same derived seed -> same cache key
+    assert make_approx_key(1, 2, 3, "ascending", 0.1) == make_approx_key(
+        1, 2, 3, "ascending", 0.1
+    )
+    assert make_approx_key(1, 2, 3, "ascending", 0.1) != make_approx_key(
+        1, 2, 3, "ascending", 0.2
+    )
+    assert make_approx_key(1, 2, 3, "ascending", 0.1) != make_key(
+        1, 2, 3, "ascending"
+    )
+
+    svc = MiningService.from_dataset(_rand(9, 700, 4, 5), sampling=SMALL)
+    first = svc.mine(tau=2, kmax=2, mode="approx")
+    again = svc.mine(tau=2, kmax=2, mode="approx")
+    assert first.info["seed"] == again.info["seed"]
+    assert again.source == "cache"
+    assert svc.stats()["sampling"]["sampled_mines"] == 1
+    svc.close()
+
+
+def test_approx_entries_never_serve_as_incremental_base():
+    result = mine(_rand(10, 60, 3, 4), KyivConfig(tau=1, kmax=2))
+    cache = ResultCache()
+    cache.put(CacheEntry(
+        key=make_approx_key(5, 1, 2, "ascending", 0.1),
+        result=result, source="approx", info={},
+    ))
+    assert cache.latest_base(1, 2, "ascending", before_version=9) is None
+    cache.put(CacheEntry(
+        key=make_key(4, 1, 2, "ascending"),
+        result=result, source="cold", info={},
+    ))
+    base = cache.latest_base(1, 2, "ascending", before_version=9)
+    assert base is not None and base.key == make_key(4, 1, 2, "ascending")
+
+
+def test_mode_and_epsilon_validation():
+    svc = MiningService.from_dataset(_rand(11, 50, 3, 4))
+    with pytest.raises(ValueError):
+        svc.mine(tau=1, kmax=2, mode="fuzzy")
+    with pytest.raises(ValueError):
+        svc.mine(tau=1, kmax=2, mode="approx", epsilon=0.0)
+    with pytest.raises(ValueError):
+        svc.mine(tau=1, kmax=2, mode="approx", epsilon=1.5)
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# HTTP surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def http_service():
+    from repro.launch.serve_miner import make_server
+
+    svc = MiningService.from_dataset(_rand(12, 800, 4, 5), sampling=SMALL)
+    server = make_server(svc, port=0)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    yield svc, server.server_address[1]
+    server.shutdown()
+    server.server_close()
+    svc.close()
+
+
+def _req(port, path, payload=None):
+    url = f"http://127.0.0.1:{port}{path}"
+    if payload is None:
+        resp = urllib.request.urlopen(url, timeout=30)
+    else:
+        resp = urllib.request.urlopen(
+            urllib.request.Request(
+                url,
+                data=json.dumps(payload).encode(),
+                headers={"Content-Type": "application/json"},
+            ),
+            timeout=30,
+        )
+    return resp.status, json.loads(resp.read())
+
+
+def test_http_approx_mine_and_stats(http_service):
+    svc, port = http_service
+    code, m = _req(port, "/mine?mode=approx&epsilon=0.2&tau=2&kmax=2")
+    assert code == 200 and m["source"] == "approx"
+    assert m["info"]["mode"] == "approx" and m["info"]["epsilon"] == 0.2
+    assert "confidence" in m["info"] and "seed" in m["info"]
+
+    svc.scheduler.drain(timeout=120)
+    code, m2 = _req(port, "/mine", {"mode": "approx", "epsilon": 0.2,
+                                    "tau": 2, "kmax": 2})
+    assert m2["source"] == "cache" and m2["info"]["refined"] is True
+
+    code, stats = _req(port, "/stats")
+    ss = stats["sampling"]
+    assert ss["sampled_mines"] == 1 and ss["approx_served"] == 2
+    assert ss["last"]["epsilon"] == 0.2
+
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _req(port, "/mine?mode=bogus")
+    assert e.value.code == 400
+
+
+# ---------------------------------------------------------------------------
+# chaos: kill mid-refinement -> restart -> converge
+# ---------------------------------------------------------------------------
+
+
+def test_kill_mid_refinement_restart_converges(tmp_path):
+    data = _rand(13, 150, 6, 4)
+    undisturbed = mine(data, KyivConfig(tau=2, kmax=4))
+
+    d = str(tmp_path / "wal")
+    inj = FaultInjector()
+    svc = MiningService(engine="numpy", wal_dir=d, fault_injector=inj)
+    svc.append(data)
+    # die at the refinement's second level boundary — after the exact
+    # promotion run saved its first checkpoint
+    inj.arm("mine.level_end", action="raise", exc=KillPoint("mid-refine"),
+            after=1)
+    r = svc.mine(tau=2, kmax=4, mode="approx")
+    assert r.source == "approx"  # the sample answer itself is unaffected
+    svc.scheduler.drain(timeout=120)
+    ss = svc.stats()["sampling"]
+    assert ss["refinements"] == 1 and ss["refine_failures"] == 1
+    # the approx entry was not promoted
+    r2 = svc.mine(tau=2, kmax=4, mode="approx")
+    assert r2.info.get("promoted") is None
+    svc.close()
+
+    # "restart": recovery resumes the killed exact promotion from its
+    # checkpoint; approx requests then converge on the exact answer
+    svc2 = MiningService(engine="numpy", wal_dir=d)
+    assert svc2.stats()["durability"]["resumed_jobs"] == 1
+    exact = svc2.mine(tau=2, kmax=4)
+    assert _canonical(exact.result) == _canonical(undisturbed)
+    ra = svc2.mine(tau=2, kmax=4, mode="approx")
+    assert ra.source == "cache"
+    assert ra.info["confidence"] == 1.0 and ra.info["refined"] is True
+    assert _canonical(ra.result) == _canonical(undisturbed)
+    svc2.close()
+
+
+# ---------------------------------------------------------------------------
+# 8-device forced-host mesh (subprocess: XLA flags must precede jax init)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+import jax
+from repro.core import KyivConfig, MeshPlacement, mine
+from repro.service import MiningService, SamplingConfig
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+placement = MeshPlacement(mesh, pair_axes=("data",), word_axis="model")
+data = np.random.default_rng(21).integers(0, 5, size=(900, 5))
+cold = mine(data, KyivConfig(tau=2, kmax=3))
+
+svc = MiningService.from_dataset(
+    data, placement=placement,
+    sampling=SamplingConfig(oversample=1.0, min_rows=64),
+)
+r = svc.mine(tau=2, kmax=3, mode="approx")
+assert r.source == "approx", r.source
+assert 0 < r.info["sample_rows"] < 900, r.info
+svc.scheduler.drain(timeout=300)
+r2 = svc.mine(tau=2, kmax=3, mode="approx")
+assert r2.info["refined"] is True and r2.info["confidence"] == 1.0, r2.info
+got = sorted((tuple(sorted(i)), int(c)) for i, c in r2.result.itemsets)
+ref = sorted((tuple(sorted(i)), int(c)) for i, c in cold.itemsets)
+assert got == ref, "mesh refinement diverged from the numpy cold mine"
+svc.close()
+print("MESH_SAMPLING_OK")
+"""
+
+
+@pytest.mark.slow
+def test_mesh_approx_refines_bit_identical_8dev():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT, src],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MESH_SAMPLING_OK" in proc.stdout

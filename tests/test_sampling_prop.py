@@ -1,0 +1,175 @@
+"""Hypothesis sweeps: sampled mining always converges to the exact answer.
+
+For arbitrary random tables, thresholds, depths and accuracies — on every
+engine — the approx answer's background refinement must promote the cache
+to a result bit-identical (itemsets AND counts) to an undisturbed cold
+``mine()``; the sampler itself must be reproducible per
+``(version, ε, seed)``; and a refinement killed mid-promotion must still
+converge after a restart resumes it from the level checkpoint.
+
+The 8-device forced-host mesh variant runs fixed seeds in a subprocess
+(XLA's device-count flag must precede jax init, so hypothesis can't drive
+it in-process); the in-process engine sweep is the hypothesis-driven part.
+Gated in conftest.py when hypothesis is absent (deterministic coverage
+lives in tests/test_sampling.py).
+"""
+
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import KyivConfig, mine
+from repro.sampling import SamplingConfig, build_sample
+from repro.service import FaultInjector, KillPoint, MiningService
+
+# small bound constants so mid-sized tables are strictly subsampled and
+# the boundary band is actually exercised
+SMALL = SamplingConfig(oversample=0.5, min_rows=32)
+
+table_st = st.tuples(
+    st.integers(120, 400),  # rows
+    st.integers(3, 5),  # columns
+    st.integers(3, 6),  # per-column domain
+    st.integers(1, 4),  # tau
+    st.integers(2, 4),  # kmax
+    st.integers(0, 10_000),  # seed
+    st.sampled_from([0.05, 0.1, 0.3, 0.5]),  # epsilon
+)
+
+
+def _canonical(result):
+    return sorted((tuple(sorted(ids)), int(c)) for ids, c in result.itemsets)
+
+
+@pytest.mark.parametrize("engine", ["numpy", "jnp", "pallas"])
+@settings(max_examples=8, deadline=None)
+@given(table_st)
+def test_refinement_converges_to_cold_mine(engine, params):
+    n, m, dom, tau, kmax, seed, eps = params
+    data = np.random.default_rng(seed).integers(0, dom, size=(n, m))
+    cold = mine(data, KyivConfig(tau=tau, kmax=kmax, engine="numpy"))
+
+    svc = MiningService.from_dataset(
+        data, engine=engine, interpret=True, sampling=SMALL
+    )
+    r = svc.mine(tau=tau, kmax=kmax, mode="approx", epsilon=eps)
+    assert r.source == "approx"
+    assert r.info["epsilon"] == eps
+    assert 0.0 <= r.info["confidence"] <= 1.0
+    drained = svc.scheduler.drain(timeout=300)
+    assert drained["abandoned"] == 0
+
+    refined = svc.mine(tau=tau, kmax=kmax, mode="approx", epsilon=eps)
+    assert refined.info["refined"] is True
+    assert refined.info["confidence"] == 1.0
+    assert _canonical(refined.result) == _canonical(cold)
+    # and the promoted exact entry answers exact requests identically
+    exact = svc.mine(tau=tau, kmax=kmax)
+    assert exact.source == "cache"
+    assert _canonical(exact.result) == _canonical(cold)
+    svc.close()
+
+
+@settings(max_examples=10, deadline=None)
+@given(table_st)
+def test_sample_is_reproducible_per_version_tuple(params):
+    n, m, dom, tau, kmax, seed, eps = params
+    from repro.core import itemize
+
+    table = itemize(np.random.default_rng(seed).integers(0, dom, size=(n, m)))
+    a = build_sample(table, version=3, tau=tau, epsilon=eps, config=SMALL)
+    b = build_sample(table, version=3, tau=tau, epsilon=eps, config=SMALL)
+    assert a.seed == b.seed and a.tau_sample == b.tau_sample
+    np.testing.assert_array_equal(a.rows, b.rows)
+    np.testing.assert_array_equal(a.table.bits, b.table.bits)
+    # a different version draws a different (but reproducible) sample
+    c = build_sample(table, version=4, tau=tau, epsilon=eps, config=SMALL)
+    assert c.seed != a.seed
+    # the sampled view stays mineable: same items, positive row count
+    assert c.table.n_items == table.n_items
+    assert 0 < c.table.n_rows <= n
+
+
+@settings(max_examples=6, deadline=None)
+@given(table_st, st.integers(1, 2))
+def test_killed_refinement_converges_after_restart(params, kill_after):
+    n, m, dom, tau, kmax, seed, eps = params
+    kmax = max(kmax, kill_after + 2)  # deep enough to die mid-promotion
+    data = np.random.default_rng(seed).integers(0, dom, size=(n, m))
+    undisturbed = mine(data, KyivConfig(tau=tau, kmax=kmax))
+
+    d = tempfile.mkdtemp(prefix="sampling-chaos-")
+    try:
+        inj = FaultInjector()
+        svc = MiningService(
+            engine="numpy", wal_dir=d, fault_injector=inj, sampling=SMALL
+        )
+        svc.append(data)
+        inj.arm("mine.level_end", action="raise",
+                exc=KillPoint("mid-refine"), after=kill_after)
+        r = svc.mine(tau=tau, kmax=kmax, mode="approx", epsilon=eps)
+        assert r.source == "approx"
+        svc.scheduler.drain(timeout=300)
+        # the promotion died; the fast answer survived, unpromoted
+        assert svc.stats()["sampling"]["refine_failures"] == 1
+        svc.close()
+
+        svc2 = MiningService(engine="numpy", wal_dir=d, sampling=SMALL)
+        assert svc2.stats()["durability"]["resumed_jobs"] == 1
+        exact = svc2.mine(tau=tau, kmax=kmax)
+        assert _canonical(exact.result) == _canonical(undisturbed)
+        approx = svc2.mine(tau=tau, kmax=kmax, mode="approx", epsilon=eps)
+        assert approx.info["confidence"] == 1.0
+        assert _canonical(approx.result) == _canonical(undisturbed)
+        svc2.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+import jax
+from repro.core import KyivConfig, MeshPlacement, mine
+from repro.service import MiningService, SamplingConfig
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+placement = MeshPlacement(mesh, pair_axes=("data",), word_axis="model")
+for seed, tau, kmax, eps in ((3, 1, 3, 0.1), (11, 2, 3, 0.3), (27, 3, 2, 0.5)):
+    data = np.random.default_rng(seed).integers(0, 5, size=(700, 4))
+    cold = mine(data, KyivConfig(tau=tau, kmax=kmax))
+    svc = MiningService.from_dataset(
+        data, placement=placement,
+        sampling=SamplingConfig(oversample=0.5, min_rows=32),
+    )
+    r = svc.mine(tau=tau, kmax=kmax, mode="approx", epsilon=eps)
+    assert r.source == "approx", (seed, r.source)
+    svc.scheduler.drain(timeout=300)
+    r2 = svc.mine(tau=tau, kmax=kmax, mode="approx", epsilon=eps)
+    assert r2.info["refined"] is True, (seed, r2.info)
+    got = sorted((tuple(sorted(i)), int(c)) for i, c in r2.result.itemsets)
+    ref = sorted((tuple(sorted(i)), int(c)) for i, c in cold.itemsets)
+    assert got == ref, f"mesh refinement diverged at seed={seed}"
+    svc.close()
+print("MESH_SAMPLING_SWEEP_OK")
+"""
+
+
+@pytest.mark.slow
+def test_mesh_refinement_sweep_8dev():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT, src],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MESH_SAMPLING_SWEEP_OK" in proc.stdout
