@@ -34,6 +34,7 @@ BENCHES = [
     ("fused", "bench_fused_pipeline"),
     ("service", "bench_service"),
     ("sampling", "bench_sampling"),
+    ("obs", "bench_obs"),
     ("roofline", "bench_roofline"),
 ]
 

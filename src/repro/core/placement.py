@@ -66,6 +66,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels.intersect import ops as _ops
+from ..obs import cost as _obs_cost
 from ..obs import metrics as _om
 from .bitops import popcount_rows
 
@@ -119,6 +120,7 @@ def _guard(site: str, kind: str = "device") -> None:
     # never routes through here — it must stay failure-free (see above) —
     # so HostPlacement methods call _count_dispatch directly.
     _count_dispatch(site, kind)
+    _obs_cost.add(device_dispatches=1)
     if _fault_hook is not None:
         _fault_hook(site)
 

@@ -32,7 +32,20 @@ Endpoints (JSON in / JSON out):
   POST /cancel   {"tau": 1, "kmax": 3}                  -> cancel in-flight matching runs
   GET  /metrics                                         -> Prometheus text exposition
                                                            (auth-gated, backpressure-exempt)
-  GET  /trace?n=10 | /trace?id=TRACE_ID                 -> recent mining-trace span trees
+  GET  /trace?n=10 | /trace?id=TRACE_ID                 -> recent mining-trace span trees;
+                                                           &before=SEQ pages backwards
+                                                           without duplicates (the response
+                                                           carries "next_before")
+  GET  /debug/lastcrash                                 -> the previous incarnation's
+                                                           parsed flight ring (in-flight
+                                                           spans at death, last checkpointed
+                                                           level, active request keys)
+  GET  /debug/slowlog?n=20                              -> newest-first slow-mine cost
+                                                           envelopes (--slow-mine-threshold-s)
+  GET  /debug/bundle                                    -> one gzipped JSON postmortem
+                                                           bundle: metrics, traces, slowlog,
+                                                           lastcrash, stats, exec-cache keys,
+                                                           resolved config
 
 Request correlation: every data route runs under a trace. Clients may send
 ``X-Trace-Id``; the id (incoming or freshly minted) is echoed in the
@@ -68,6 +81,7 @@ Hardening (ROADMAP "authn and backpressure"):
 from __future__ import annotations
 
 import argparse
+import gzip
 import hmac
 import json
 import os
@@ -100,7 +114,8 @@ _log = obs_logs.get_logger()
 # bucketed as "other" to bound cardinality against path scanning
 _KNOWN_ROUTES = frozenset(
     {"/append", "/mine", "/report", "/risk", "/anonymize", "/stats",
-     "/cancel", "/healthz", "/readyz", "/metrics", "/trace"}
+     "/cancel", "/healthz", "/readyz", "/metrics", "/trace",
+     "/debug/lastcrash", "/debug/slowlog", "/debug/bundle"}
 )
 # data routes run under a trace; probes and the obs endpoints themselves
 # don't (a scrape must never displace a mining trace in the ring buffer)
@@ -169,6 +184,18 @@ class MinerHandler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def _send_gzip_json(self, code: int, payload: dict) -> None:
+        body = gzip.compress(json.dumps(payload, default=str).encode("utf-8"))
+        self._last_code = code
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Encoding", "gzip")
+        self.send_header("Content-Length", str(len(body)))
+        if self._trace_id:
+            self.send_header("X-Trace-Id", self._trace_id)
+        self.end_headers()
+        self.wfile.write(body)
+
     def _body(self) -> dict:
         length = int(self.headers.get("Content-Length") or 0)
         if not length:
@@ -208,6 +235,12 @@ class MinerHandler(BaseHTTPRequestHandler):
             return
         if route == "/trace":
             self._handle_trace(payload)
+            return
+        if route.startswith("/debug/"):
+            # forensic snapshots are backpressure-exempt for the same reason
+            # /metrics is: a saturated or just-crashed server is exactly when
+            # operators need them (still auth-gated — internals leak here)
+            self._handle_debug(route, payload)
             return
         if self.inflight is not None and not self.inflight.acquire(blocking=False):
             self._count("rejected")
@@ -304,13 +337,42 @@ class MinerHandler(BaseHTTPRequestHandler):
             self._send(200, {"trace": trace.to_dict()})
             return
         n = int(payload.get("n", 10))
+        before = payload.get("before")
+        traces, next_before = _obs_tracer.page(
+            n, before=int(before) if before is not None else None
+        )
         self._send(
             200,
             {
-                "traces": [t.to_dict() for t in _obs_tracer.last(n)],
+                "traces": [t.to_dict() for t in traces],
+                "next_before": next_before,
                 "tracer": _obs_tracer.stats(),
             },
         )
+
+    def _handle_debug(self, route: str, payload: dict) -> None:
+        if route == "/debug/lastcrash":
+            self._count("debug")
+            self._send(
+                200, {"report": self.service.last_crash_report()}
+            )
+        elif route == "/debug/slowlog":
+            self._count("debug")
+            n = payload.get("n")
+            self._send(
+                200,
+                {
+                    "entries": self.service.slowlog_entries(
+                        int(n) if n is not None else None
+                    ),
+                    "slowlog": self.service.slowlog.stats(),
+                },
+            )
+        elif route == "/debug/bundle":
+            self._count("debug")
+            self._send_gzip_json(200, self.service.debug_bundle())
+        else:
+            self._send(404, {"error": f"unknown route {route}"})
 
     def _run(self, payload: dict) -> None:
         try:
@@ -443,6 +505,17 @@ def main() -> None:
                     help="ring-buffer size for finished traces (GET /trace)")
     ap.add_argument("--trace-sample", type=int, default=1,
                     help="trace 1 in N requests (1 = every request)")
+    ap.add_argument("--slow-mine-threshold-s", type=float, default=1.0,
+                    help="mines slower than this land in GET /debug/slowlog "
+                         "with their full cost envelope")
+    ap.add_argument("--no-flight", action="store_true",
+                    help="disable the crash-persistent flight recorder "
+                         "(only meaningful with --wal-dir)")
+    ap.add_argument("--flight-fsync-s", type=float, default=0.25,
+                    help="flight-recorder flush/fsync cadence; checkpoints "
+                         "and config events always fsync inline")
+    ap.add_argument("--flight-max-bytes", type=int, default=1 << 20,
+                    help="on-disk bound for the flight event ring")
     args = ap.parse_args()
 
     obs_logs.setup(level=args.log_level, json_mode=args.log_json)
@@ -469,6 +542,10 @@ def main() -> None:
         snapshot_every=args.snapshot_every,
         incremental=IncrementalConfig(max_delta_fraction=args.max_delta_fraction),
         profile_dir=args.profile_dir,
+        slow_mine_threshold_s=args.slow_mine_threshold_s,
+        flight_enabled=not args.no_flight,
+        flight_fsync_s=args.flight_fsync_s,
+        flight_max_bytes=args.flight_max_bytes,
     )
     if args.preload == "randomized":
         from ..data.synth import randomized_dataset

@@ -12,6 +12,12 @@ records into, plus an opt-in profiler shim:
   (``trace_id``/``span_id``/``parent_id``), threaded from the HTTP layer
   through the scheduler into the level/batch loop and the placement
   dispatch seams; last-N finished traces served by ``GET /trace``.
+* :mod:`repro.obs.flight` — the black-box flight recorder: a bounded,
+  CRC-framed on-disk event ring (span open/close, checkpoints, breaker
+  transitions, config) parsed into a ``LastCrashReport`` on restart.
+* :mod:`repro.obs.cost` — per-request ``CostEnvelope`` accumulation
+  (rows scanned, candidate pairs, device bytes, compile-vs-reuse) attached
+  to ``/mine`` responses and the slow-mine forensics log.
 * :mod:`repro.obs.logs` — structured (optionally JSON) logging carrying the
   active ``trace_id``.
 * :mod:`repro.obs.profile` — ``jax.profiler`` xplane wrapping + device
@@ -23,14 +29,22 @@ Import discipline: this package is a **leaf** like ``core/exec_cache.py`` —
 so nothing in it may import from the rest of ``repro`` at module scope.
 """
 
-from . import logs, metrics, trace
+from . import cost, flight, logs, metrics, trace
+from .cost import CostEnvelope, SlowMineLog
+from .flight import FlightRecorder, LastCrashReport
 from .metrics import REGISTRY, counter, gauge, histogram, lint_exposition
 from .trace import TRACER, current_trace_id, span, start_trace
 
 __all__ = [
+    "cost",
+    "flight",
     "logs",
     "metrics",
     "trace",
+    "CostEnvelope",
+    "SlowMineLog",
+    "FlightRecorder",
+    "LastCrashReport",
     "REGISTRY",
     "TRACER",
     "counter",

@@ -26,6 +26,7 @@ from __future__ import annotations
 import math
 import re
 import threading
+import time
 from bisect import bisect_left
 from typing import Callable, Iterable
 
@@ -188,16 +189,27 @@ class Histogram(_Family):
             raise ValueError(f"{self.name}: histogram needs at least one bucket")
         self.buckets = bs
         self._series: dict[tuple, list] = {}
+        # per-(labelset, bucket) exemplar: (value, labels, unix_ts) — the
+        # most recent observation that carried one (OpenMetrics keeps one
+        # exemplar per bucket; newest-wins is the standard behaviour)
+        self._exemplars: dict[tuple, dict[int, tuple]] = {}
 
-    def observe(self, value: float, **labels) -> None:
+    def observe(self, value: float, exemplar: dict | None = None, **labels) -> None:
         key = self._key(labels)
         with self._lock:
             series = self._series.get(key)
             if series is None:
                 series = self._series[key] = [0] * (len(self.buckets) + 1) + [0.0, 0]
-            series[bisect_left(self.buckets, value)] += 1
+            idx = bisect_left(self.buckets, value)
+            series[idx] += 1
             series[-2] += float(value)
             series[-1] += 1
+            if exemplar:
+                self._exemplars.setdefault(key, {})[idx] = (
+                    float(value),
+                    {str(k): str(v) for k, v in exemplar.items()},
+                    time.time(),
+                )
 
     def series(self, **labels) -> dict:
         """JSON view: {"buckets": [(le, cumulative_count)...], "sum", "count"}."""
@@ -217,15 +229,24 @@ class Histogram(_Family):
         out.append(f"# TYPE {self.name} {self.mtype}")
         for key in sorted(self._series):
             series = self._series[key]
+            exemplars = self._exemplars.get(key, {})
             acc = 0
-            for le, c in zip(self.buckets + (math.inf,), series[:-2]):
+            for idx, (le, c) in enumerate(zip(self.buckets + (math.inf,), series[:-2])):
                 acc += c
                 lkey = key + (_fmt(le),)
                 pairs = ",".join(
                     f'{ln}="{_escape_label(lv)}"'
                     for ln, lv in zip(self.labelnames + ("le",), lkey)
                 )
-                out.append(f"{self.name}_bucket{{{pairs}}} {acc}")
+                line = f"{self.name}_bucket{{{pairs}}} {acc}"
+                ex = exemplars.get(idx)
+                if ex is not None:
+                    ev, elabels, ets = ex
+                    epairs = ",".join(
+                        f'{k}="{_escape_label(v)}"' for k, v in sorted(elabels.items())
+                    )
+                    line += f" # {{{epairs}}} {_fmt(ev)} {ets:.3f}"
+                out.append(line)
             ls = self._label_str(key)
             out.append(f"{self.name}_sum{ls} {_fmt(series[-2])}")
             out.append(f"{self.name}_count{ls} {series[-1]}")
@@ -363,8 +384,9 @@ def snapshot() -> dict:
 # -- exposition linting (CI obs-smoke) ---------------------------------------
 
 _SAMPLE_RE = re.compile(
-    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)(?P<labels>\{[^}]*\})?\s+(?P<value>\S+)"
-    r"(\s+\d+)?$"
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)(?P<labels>\{[^}]*\})?\s+(?P<value>\S+?)"
+    r"(\s+\d+)?"
+    r"(?P<exemplar>\s+#\s+\{(?P<exlabels>[^}]*)\}\s+(?P<exvalue>\S+)(\s+\S+)?)?$"
 )
 
 
@@ -420,6 +442,31 @@ def lint_exposition(text: str) -> list[str]:
         mtype = typed[base]
         if mtype == "counter" and not base.endswith("_total"):
             problems.append(f"counter {base!r} does not end in _total")
+        if m.group("exemplar"):
+            # OpenMetrics: exemplars are only valid on histogram buckets
+            if mtype != "histogram" or not sname.endswith("_bucket"):
+                problems.append(
+                    f"line {lineno}: exemplar on non-histogram-bucket sample "
+                    f"{sname!r}"
+                )
+            for pair in filter(None, (m.group("exlabels") or "").split(",")):
+                if "=" not in pair:
+                    problems.append(f"line {lineno}: malformed exemplar label {pair!r}")
+                    continue
+                ename, evalue = pair.split("=", 1)
+                if not _LABEL_RE.match(ename):
+                    problems.append(f"line {lineno}: bad exemplar label name {ename!r}")
+                if not (evalue.startswith('"') and evalue.endswith('"')):
+                    problems.append(
+                        f"line {lineno}: exemplar label value not quoted {evalue!r}"
+                    )
+            try:
+                float(m.group("exvalue"))
+            except (TypeError, ValueError):
+                problems.append(
+                    f"line {lineno}: non-numeric exemplar value "
+                    f"{m.group('exvalue')!r}"
+                )
         try:
             value = float(m.group("value"))
         except ValueError:

@@ -98,6 +98,9 @@ class Trace:
         self.started_at = time.time()
         self.spans: list[Span] = []
         self.root: Span | None = None
+        # ring position, assigned when the finished trace is appended to the
+        # Tracer's buffer — the stable cursor `GET /trace?before=` pages on
+        self.seq: int | None = None
         self._lock = threading.Lock()
 
     def add(self, span: Span) -> None:
@@ -139,6 +142,7 @@ class Trace:
         roots = by_parent.get(None, [])
         return {
             "trace_id": self.trace_id,
+            "seq": self.seq,
             "name": self.name,
             "started_at": self.started_at,
             "meta": dict(self.meta),
@@ -169,6 +173,13 @@ class Tracer:
         self.sync_devices = False
         self._started = 0
         self._sampled_out = 0
+        self._appended = 0  # monotone: doubles as the per-trace seq cursor
+        self._dropped = 0  # traces evicted from the ring by newer arrivals
+        # span-lifecycle listeners (the flight recorder): fn(event, span,
+        # trace) with event "open" | "close". Zero-cost when empty — span()
+        # only pays a truthiness check. Listener errors are swallowed; the
+        # traced code must never fail because a recorder did.
+        self._listeners: list = []
 
     def configure(self, *, max_traces: int | None = None,
                   sample_every: int | None = None,
@@ -180,6 +191,25 @@ class Tracer:
                 self.sample_every = max(1, int(sample_every))
             if sync_devices is not None:
                 self.sync_devices = bool(sync_devices)
+
+    # -- listeners -----------------------------------------------------------
+
+    def add_listener(self, fn) -> None:
+        with self._lock:
+            if fn not in self._listeners:
+                self._listeners.append(fn)
+
+    def remove_listener(self, fn) -> None:
+        with self._lock:
+            if fn in self._listeners:
+                self._listeners.remove(fn)
+
+    def _notify(self, event: str, sp: Span, trace: Trace) -> None:
+        for fn in list(self._listeners):
+            try:
+                fn(event, sp, trace)
+            except Exception:
+                pass
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -205,13 +235,22 @@ class Tracer:
         root = Span(trace.trace_id, None, name)
         trace.root = root
         token = _CTX.set((trace, root))
+        if self._listeners:
+            self._notify("open", root, trace)
         try:
             yield root
         finally:
             root.t1 = time.perf_counter()
             trace.add(root)
             _CTX.reset(token)
+            if self._listeners:
+                self._notify("close", root, trace)
             with self._lock:
+                if (self._traces.maxlen is not None
+                        and len(self._traces) == self._traces.maxlen):
+                    self._dropped += 1
+                trace.seq = self._appended
+                self._appended += 1
                 self._traces.append(trace)
 
     @contextmanager
@@ -225,12 +264,16 @@ class Tracer:
         trace, parent = ctx
         sp = Span(trace.trace_id, parent.span_id, name, attrs)
         token = _CTX.set((trace, sp))
+        if self._listeners:
+            self._notify("open", sp, trace)
         try:
             yield sp
         finally:
             sp.t1 = time.perf_counter()
             trace.add(sp)
             _CTX.reset(token)
+            if self._listeners:
+                self._notify("close", sp, trace)
 
     # -- queries -------------------------------------------------------------
 
@@ -245,6 +288,21 @@ class Tracer:
         with self._lock:
             return list(self._traces)[-max(0, int(n)):]
 
+    def page(self, n: int = 10, before: int | None = None) -> tuple[list[Trace], int | None]:
+        """Newest-first page of finished traces, keyed on the stable ring
+        sequence number. ``before`` bounds the page to traces with
+        ``seq < before`` so successive pages never repeat an entry even
+        while new traces arrive. Returns ``(traces, next_before)`` where
+        ``next_before`` is the cursor for the following page (None when
+        the ring is exhausted)."""
+        n = max(0, int(n))
+        with self._lock:
+            candidates = [t for t in reversed(self._traces)
+                          if before is None or (t.seq is not None and t.seq < before)]
+        pg = candidates[:n]
+        next_before = pg[-1].seq if pg and len(candidates) > n else None
+        return pg, next_before
+
     def stats(self) -> dict:
         with self._lock:
             return {
@@ -252,6 +310,8 @@ class Tracer:
                 "max_traces": self._traces.maxlen,
                 "started": self._started,
                 "sampled_out": self._sampled_out,
+                "appended": self._appended,
+                "dropped": self._dropped,
                 "sample_every": self.sample_every,
                 "sync_devices": self.sync_devices,
             }
@@ -261,6 +321,8 @@ class Tracer:
             self._traces.clear()
             self._started = 0
             self._sampled_out = 0
+            self._appended = 0
+            self._dropped = 0
 
 
 TRACER = Tracer()

@@ -39,8 +39,11 @@ from ..core.kyiv import KyivConfig, MiningResult, RunControl, mine_preprocessed
 from ..core.placement import HostPlacement, is_device_failure, resolve_placement
 from ..core.preprocess import preprocess
 from ..core import exec_cache
+from ..obs import cost as _obs_cost
+from ..obs import flight as _obs_flight
 from ..obs import metrics as _om
 from ..obs.trace import TRACER as _obs_tracer
+from ..obs.trace import current_trace_id as _obs_current_trace_id
 from ..obs.trace import span as _obs_span
 from ..obs.trace import start_trace as _obs_start_trace
 from ..distributed.checkpoint import CheckpointManager
@@ -227,6 +230,11 @@ class MiningService:
         defer_recovery: bool = False,
         profile_dir: str | None = None,
         sampling: SamplingConfig | None = None,
+        slow_mine_threshold_s: float = 1.0,
+        slow_log_size: int = 64,
+        flight_enabled: bool = True,
+        flight_fsync_s: float = 0.25,
+        flight_max_bytes: int = 1 << 20,
         **config_kw,
     ):
         self.config = config or KyivConfig(**config_kw)
@@ -252,11 +260,32 @@ class MiningService:
         self.wal_dir = wal_dir
         self.job_checkpoint_levels = max(1, int(job_checkpoint_levels))
         self.deadline_grace_s = deadline_grace_s
+        # forensics: parse the *previous* incarnation's flight ring into a
+        # LastCrashReport before opening this incarnation's (which reaps the
+        # old segment files), then hook the recorder into the tracer and the
+        # breaker. No wal_dir -> no ring (the recorder is crash forensics;
+        # an in-memory service has nothing to survive into).
+        self.slowlog = _obs_cost.SlowMineLog(slow_mine_threshold_s, slow_log_size)
+        self.flight: _obs_flight.FlightRecorder | None = None
+        self.last_crash: _obs_flight.LastCrashReport | None = None
+        if wal_dir is not None and flight_enabled:
+            flight_dir = os.path.join(wal_dir, "flight")
+            self.last_crash = _obs_flight.recover(flight_dir)
+            self.flight = _obs_flight.FlightRecorder(
+                flight_dir,
+                fsync_interval_s=flight_fsync_s,
+                max_bytes=flight_max_bytes,
+            )
+            _obs_tracer.add_listener(self.flight.span_listener)
+            self.breaker.on_transition = (
+                lambda state: self._flight_record("breaker.transition", state=state)
+            )
         self._durable: DurableStore | None = (
             DurableStore(
                 wal_dir,
                 snapshot_every=snapshot_every,
                 injector=self.injector,
+                recorder=self.flight,
                 **self._store_kw,
             )
             if wal_dir is not None
@@ -299,8 +328,84 @@ class MiningService:
         self._collector_fn = self._collect_metrics
         _om.REGISTRY.register_collector("service", self._collector_fn)
         exec_cache.publish_metrics()
+        if self.flight is not None:
+            # first durable event: the resolved config this incarnation runs
+            # with — the postmortem's "what was it configured to do"
+            self.flight.record("config", config=self._resolved_config())
+            if self.last_crash is not None and not self.last_crash.clean_shutdown:
+                from ..obs import logs as _obs_logs
+
+                _obs_logs.get_logger("repro.service").warning(
+                    "previous incarnation died uncleanly: %d open span(s), "
+                    "last checkpointed level %s — GET /debug/lastcrash for "
+                    "the full report",
+                    len(self.last_crash.open_spans),
+                    (self.last_crash.last_checkpoint or {}).get("level"),
+                )
         if not defer_recovery:
             self.recover()
+
+    def _flight_record(self, kind: str, **fields) -> None:
+        if self.flight is not None:
+            self.flight.record(kind, **fields)
+
+    def _account_cost(
+        self,
+        env: _obs_cost.CostEnvelope,
+        source: str,
+        version: int,
+        tau: int,
+        kmax: int,
+        latency: float,
+    ) -> dict:
+        """Finish a request's envelope: stamp the serving path, publish the
+        per-path cost histograms (trace_id as exemplar) and offer the entry
+        to the slow-mine log. Returns the ``info.cost`` dict."""
+        env.note(path=source, version=int(version))
+        env.finish()
+        env.wall_s = latency
+        _obs_cost.publish(env)
+        self.slowlog.offer(env, tau=int(tau), kmax=int(kmax))
+        return env.to_dict()
+
+    def _resolved_config(self) -> dict:
+        """The effective configuration this incarnation serves with — the
+        flight ring's startup event and the debug bundle's config section."""
+        cfg = {
+            f.name: getattr(self.config, f.name)
+            for f in dataclasses.fields(self.config)
+        }
+        cfg["placement"] = self.placement.kind
+        return {
+            "mining": cfg,
+            "wal_dir": self.wal_dir,
+            "job_checkpoint_levels": self.job_checkpoint_levels,
+            "deadline_grace_s": self.deadline_grace_s,
+            "cache": {
+                "capacity": self.cache.capacity,
+                "max_bytes": self.cache.max_bytes,
+            },
+            "resilience": {
+                "max_retries": self.resilience.max_retries,
+                "failure_threshold": self.resilience.failure_threshold,
+                "cooldown_s": self.resilience.cooldown_s,
+            },
+            "sampling": {
+                "epsilon": self.sampling.epsilon,
+                "delta": self.sampling.delta,
+                "seed": self.sampling.seed,
+            },
+            "slow_mine_threshold_s": self.slowlog.threshold_s,
+            "flight": (
+                {
+                    "fsync_interval_s": self.flight.fsync_interval_s,
+                    "max_bytes": self.flight.max_bytes,
+                    "incarnation": self.flight.incarnation,
+                }
+                if self.flight is not None
+                else None
+            ),
+        }
 
     @classmethod
     def from_dataset(cls, dataset: np.ndarray, **kw) -> "MiningService":
@@ -506,6 +611,13 @@ class MiningService:
                         {"state": np.frombuffer(blob, dtype=np.uint8)},
                         blocking=True,
                     )
+                    # durable flight event — its inline fsync also carries
+                    # every buffered span-open to disk, so a death right
+                    # after the checkpoint still yields a ring that names
+                    # the in-flight level
+                    self._flight_record(
+                        "job.checkpoint", level=int(level), key=list(key)
+                    )
                 # the kill-mid-mine seam fires *after* the save — simulated
                 # death leaves the checkpoint the restart resumes from
                 self.injector.check("mine.level_end")
@@ -550,6 +662,12 @@ class MiningService:
                 except Exception as exc:
                     if not is_device_failure(exc):
                         raise
+                    self._flight_record(
+                        "dispatch.failure",
+                        error=f"{type(exc).__name__}: {exc}",
+                        attempt=attempt,
+                        key=list(key),
+                    )
                     self.breaker.record_failure()
                     attempt += 1
                     if attempt > self.resilience.max_retries or not self.breaker.allow():
@@ -588,6 +706,10 @@ class MiningService:
         if control is not None:
             with self._lock:
                 self._controls[key] = control
+        # compile-vs-reuse attribution: the envelope rode the context copy
+        # into this worker thread (same object the submitter holds)
+        _env = _obs_cost.current()
+        _xs0 = exec_cache.stats() if _env is not None else None
         try:
             # the incremental path dispatches through the device placement;
             # with the breaker open it would fail the same way the cold path
@@ -623,17 +745,39 @@ class MiningService:
                 except Exception as exc:
                     if not is_device_failure(exc):
                         raise
+                    self._flight_record(
+                        "dispatch.failure",
+                        error=f"{type(exc).__name__}: {exc}",
+                        site="incremental",
+                        key=list(key),
+                    )
                     self.breaker.record_failure()
                     inc = None
                 if inc is not None:
                     result, info = inc
+                    if _env is not None:
+                        # the delta path never enters mine_levels, so fold
+                        # its own work shape into the envelope: recounts
+                        # scan the delta rows, seed expansion the full table
+                        _env.add(
+                            levels=len(result.stats),
+                            rows_scanned=(
+                                info["delta_rows"] * info["n_recounted"]
+                                + result.prep.table.n_rows
+                                * info["n_expanded"]
+                            ),
+                            candidate_pairs=info["n_seeds"],
+                            itemsets_emitted=len(result.itemsets),
+                        )
                     entry = CacheEntry(
                         key=key, result=result, source="incremental", info=info
                     )
                     self.cache.put(entry)
                     return entry
 
-            with _obs_span("mine.cold", version=version):
+            # the request key rides the span's *open* attrs so the flight
+            # ring can name the active requests at death
+            with _obs_span("mine.cold", version=version, key=list(key)):
                 result, info = self._mine_cold(key, table, config, control)
             # per-level host-busy vs device-busy split of the last cold run —
             # the /stats view of what the device frontier buys per level
@@ -653,6 +797,16 @@ class MiningService:
             self.cache.put(entry)
             return entry
         finally:
+            if _env is not None and _xs0 is not None:
+                _xs1 = exec_cache.stats()
+                _env.add(
+                    executables_compiled=max(
+                        0, _xs1.get("misses", 0) - _xs0.get("misses", 0)
+                    ),
+                    executables_reused=max(
+                        0, _xs1.get("hits", 0) - _xs0.get("hits", 0)
+                    ),
+                )
             if control is not None:
                 with self._lock:
                     self._controls.pop(key, None)
@@ -688,10 +842,14 @@ class MiningService:
         self._require_ready()
         t0 = time.perf_counter()
         # root of the request's span tree when called directly; a child span
-        # when the HTTP layer (or a planner re-mine) already opened a trace
+        # when the HTTP layer (or a planner re-mine) already opened a trace.
+        # The cost envelope binds alongside it: the scheduler's context copy
+        # carries the same object into the worker, so the level loop's
+        # counters land here no matter which thread mines.
         with _obs_start_trace(
             "service.mine", meta={"tau": int(tau), "kmax": int(kmax)}
-        ) as _tsp:
+        ) as _tsp, _obs_cost.attach() as _cenv:
+            _cenv.note(trace_id=_obs_current_trace_id())
             # warm path first: a version read + dict lookup, no snapshot copy
             version = self.store.version
             key = make_key(version, tau, kmax, ordering)
@@ -732,7 +890,17 @@ class MiningService:
             latency = time.perf_counter() - t0
             _tsp.set(source=source, version=version)
             _MINE_REQUESTS.inc(source=source)
-            _MINE_LATENCY.observe(latency, source=source)
+            info = dict(entry.info)
+            info["cost"] = self._account_cost(
+                _cenv, source, version, tau, kmax, latency
+            )
+            _MINE_LATENCY.observe(
+                latency,
+                exemplar=(
+                    {"trace_id": _cenv.trace_id} if _cenv.trace_id else None
+                ),
+                source=source,
+            )
             return MineResponse(
                 version=version,
                 tau=tau,
@@ -741,7 +909,7 @@ class MiningService:
                 source=source,
                 latency_s=latency,
                 result=entry.result,
-                info=dict(entry.info),
+                info=info,
             )
 
     # -- sampled (approximate) mining ---------------------------------------
@@ -765,7 +933,8 @@ class MiningService:
         with _obs_start_trace(
             "service.mine",
             meta={"tau": int(tau), "kmax": int(kmax), "mode": "approx"},
-        ) as _tsp:
+        ) as _tsp, _obs_cost.attach() as _cenv:
+            _cenv.note(trace_id=_obs_current_trace_id())
             version = self.store.version
             akey = make_approx_key(version, tau, kmax, ordering, epsilon)
             entry = self.cache.get(akey)
@@ -801,8 +970,19 @@ class MiningService:
             _tsp.set(source=source, version=version, mode="approx")
             _MINE_REQUESTS.inc(source="approx")
             _SAMPLING_MINES.inc(source=source)
-            _MINE_LATENCY.observe(latency, source="approx")
+            _MINE_LATENCY.observe(
+                latency,
+                exemplar=(
+                    {"trace_id": _cenv.trace_id} if _cenv.trace_id else None
+                ),
+                source="approx",
+            )
             info = dict(entry.info)
+            info["cost"] = self._account_cost(
+                _cenv,
+                "approx" if source not in ("cache", "refined") else source,
+                version, tau, kmax, latency,
+            )
             if "mode" not in info:
                 # exact entry answering an approx request: full confidence
                 info.update(
@@ -1107,6 +1287,39 @@ class MiningService:
         )
         return out
 
+    # -- forensics ----------------------------------------------------------
+
+    def last_crash_report(self) -> dict | None:
+        """The previous incarnation's parsed flight ring (``None`` on first
+        boot or without a flight recorder) — ``GET /debug/lastcrash``."""
+        return self.last_crash.to_dict() if self.last_crash is not None else None
+
+    def slowlog_entries(self, n: int | None = None) -> list[dict]:
+        """Newest-first slow-mine envelopes — ``GET /debug/slowlog``."""
+        return self.slowlog.entries(n)
+
+    def debug_bundle(self) -> dict:
+        """One-shot postmortem snapshot — ``GET /debug/bundle`` (gzipped).
+
+        Privacy: carries no row data — itemset ids, counters and timings
+        only (same exposure as /metrics + /trace + /stats).
+        """
+        bundle = {
+            "generated_at": time.time(),
+            "config": self._resolved_config(),
+            "stats": self.stats(),
+            "metrics": _om.REGISTRY.render(),
+            "traces": [t.to_dict() for t in _obs_tracer.last(16)],
+            "slowlog": self.slowlog_entries(),
+            "lastcrash": self.last_crash_report(),
+            "exec_cache_keys": {
+                fam: [list(map(str, k)) for k in exec_cache.SHARED_EXEC_CACHE.keys(fam)]
+                for fam in exec_cache.stats()["families"]
+            },
+            "flight": self.flight.stats() if self.flight is not None else None,
+        }
+        return bundle
+
     # -- observability ------------------------------------------------------
 
     def _collect_metrics(self) -> None:
@@ -1233,6 +1446,10 @@ class MiningService:
             "repro_traces_sampled_out_total", "Traces dropped by sampling."
         ).set_total(ts["sampled_out"])
         g("repro_traces_stored", "Traces in the ring buffer.").set(ts["stored"])
+        c(
+            "repro_trace_dropped_total",
+            "Finished traces evicted from the ring by newer arrivals.",
+        ).set_total(ts["dropped"])
 
     def stats(self) -> dict:
         store = self._store
@@ -1304,6 +1521,22 @@ class MiningService:
                 "metrics": _om.REGISTRY.snapshot(),
                 "traces": _obs_tracer.stats(),
             },
+            # crash forensics + per-request cost surfaces (PR 9): the flight
+            # ring's write-side counters, the slow-mine log, and whether the
+            # previous incarnation died cleanly
+            "forensics": {
+                "flight": self.flight.stats() if self.flight is not None else None,
+                "slowlog": self.slowlog.stats(),
+                "last_crash": (
+                    {
+                        "clean_shutdown": self.last_crash.clean_shutdown,
+                        "open_spans": len(self.last_crash.open_spans),
+                        "last_checkpoint": self.last_crash.last_checkpoint,
+                    }
+                    if self.last_crash is not None
+                    else None
+                ),
+            },
         }
 
     def compact(self, keep_versions: int | None = None) -> dict:
@@ -1344,6 +1577,11 @@ class MiningService:
         self.scheduler.shutdown()
         if self._durable is not None:
             self._durable.close()
+        if self.flight is not None:
+            # orderly shutdown leaves a clean-shutdown marker in the ring —
+            # the next incarnation's LastCrashReport reads "nothing to see"
+            _obs_tracer.remove_listener(self.flight.span_listener)
+            self.flight.close()
         # drop the scrape collector only if this instance still owns the
         # slot (a newer service may have replaced it)
         _om.REGISTRY.unregister_collector("service", self._collector_fn)

@@ -57,6 +57,10 @@ class CircuitBreaker:
         self._failures = 0
         self._opened_at: float | None = None
         self.trips = 0
+        # optional ``fn(state: str)`` fired outside the breaker lock on
+        # open/closed transitions (the flight recorder); must never raise
+        # into the mining path
+        self.on_transition: Callable[[str], None] | None = None
 
     @property
     def state(self) -> str:
@@ -74,7 +78,10 @@ class CircuitBreaker:
     def record_success(self) -> None:
         with self._lock:
             self._failures = 0
+            reopened = self._opened_at is not None
             self._opened_at = None
+        if reopened:
+            self._fire("closed")
 
     def record_failure(self) -> None:
         _BREAKER_FAILURES.inc()
@@ -90,6 +97,15 @@ class CircuitBreaker:
             # outside the breaker lock: the registry's scrape collectors read
             # breaker.stats() under the registry lock (reverse order)
             _BREAKER_TRIPS.inc()
+            self._fire("open")
+
+    def _fire(self, state: str) -> None:
+        cb = self.on_transition
+        if cb is not None:
+            try:
+                cb(state)
+            except Exception:
+                pass
 
     def stats(self) -> dict:
         with self._lock:

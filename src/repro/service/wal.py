@@ -185,6 +185,7 @@ class DurableStore:
         placement=None,
         snapshot_every: int = 8,
         injector: FaultInjector = NULL_INJECTOR,
+        recorder=None,
         **store_kw,
     ):
         self.directory = directory
@@ -192,6 +193,9 @@ class DurableStore:
         self.placement = placement
         self.snapshot_every = max(1, int(snapshot_every))
         self.injector = injector
+        # optional FlightRecorder: snapshot/recover milestones go into the
+        # crash-persistent ring (durable kinds — fsync'd inline)
+        self.recorder = recorder
         self._store_kw = dict(store_kw)
         self._store_kw["placement"] = placement
         self.wal = WriteAheadLog(os.path.join(directory, "wal.log"), injector)
@@ -247,6 +251,8 @@ class DurableStore:
         # under the registry lock (reverse acquisition order)
         _SNAPSHOTS.inc()
         _SNAPSHOT_SECONDS.observe(time.perf_counter() - t0)
+        if self.recorder is not None:
+            self.recorder.record("store.snapshot", version=version)
         return version
 
     def recover(self) -> dict:
@@ -283,13 +289,16 @@ class DurableStore:
             self._since_snapshot = replayed
             _RECOVERIES.inc()
             _REPLAYED.inc(replayed)
-            return {
+            info = {
                 "snapshot_version": snapshot_version,
                 "replayed": replayed,
                 "skipped": skipped,
                 "truncated_bytes": self.wal.truncated_bytes,
                 "version": self.store.version if self.store is not None else 0,
             }
+            if self.recorder is not None:
+                self.recorder.record("store.recover", **info)
+            return info
 
     def stats(self) -> dict:
         with self._lock:

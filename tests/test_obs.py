@@ -203,6 +203,49 @@ def test_sampling_and_ring_buffer():
     assert st["stored"] == 3  # ring buffer keeps only the newest 3
 
 
+def test_ring_overflow_counted_and_paging_never_duplicates():
+    """Satellite regression: evictions are observable (``dropped``) and the
+    seq-keyed pages of ``GET /trace`` neither overlap nor skip entries."""
+    tr = Tracer(max_traces=4, sample_every=1)
+    for i in range(10):
+        with tr.start("req", meta={"i": i}):
+            pass
+    st = tr.stats()
+    assert st["appended"] == 10 and st["dropped"] == 6 and st["stored"] == 4
+
+    # newest-first pages keyed by seq: churn between page fetches must not
+    # re-serve an already-seen trace
+    page1, cursor = tr.page(2)
+    assert [t.seq for t in page1] == [9, 8] and cursor == 8
+    with tr.start("req"):  # churn evicts seq 6 between pages
+        pass
+    page2, cursor2 = tr.page(2, before=cursor)
+    assert [t.seq for t in page2] == [7], [t.seq for t in page2]
+    assert cursor2 is None  # ring exhausted: no further page
+    seen = {t.seq for t in page1} | {t.seq for t in page2}
+    assert len(seen) == 3  # no duplicates across pages
+
+    tr.reset()
+    assert tr.stats()["dropped"] == 0 and tr.stats()["appended"] == 0
+
+
+def test_trace_dropped_counter_in_stats_and_scrape(tracer_reset):
+    from repro.service import MiningService
+
+    svc = MiningService.from_dataset(_rand(0, 60, 3))
+    try:
+        TRACER.configure(max_traces=2)
+        for tau in (1, 2, 3, 1, 2):
+            svc.mine(tau=tau, kmax=2)
+        assert svc.stats()["obs"]["traces"]["dropped"] >= 3
+        text = om.REGISTRY.render()
+        assert lint_exposition(text) == []
+        m = re.search(r"^repro_trace_dropped_total (\d+)", text, re.M)
+        assert m and int(m.group(1)) >= 3
+    finally:
+        svc.close()
+
+
 def test_span_is_noop_without_active_trace():
     tr = Tracer()
     assert current_trace_id() is None
