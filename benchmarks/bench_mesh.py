@@ -1,0 +1,237 @@
+"""Multi-host fleet benchmark: N-process localhost DCN ring vs single host.
+
+Spawns ``--nproc`` real processes joined through ``jax.distributed`` on a
+localhost coordinator, each holding its word stripe of the store behind a
+``FleetPlacement``, and drives the same append / cold-mine / append /
+incremental-mine sequence through the process-0 ``FleetFrontend`` that the
+single-process baseline runs directly. Records, per process:
+
+* store shape — rows, local words vs global words (the stripe ratio),
+* collective cost — rounds, seconds, payload bytes from
+  ``Collective.stats()`` (the *only* cross-host traffic in a mine),
+* the launch environment (``launch_env_summary()``: XLA flags, allocator
+  preload) so every number carries the config that produced it,
+
+plus fleet-level rows: cold/incremental mine wall time against the
+single-process baseline, level throughput (levels and itemsets per
+second), and a bit-identity check of the mined itemsets — the fleet is a
+perf configuration, never an accuracy trade.
+
+Appends one record to ``BENCH_frontier.json`` (the level-scaling history
+file) tagged ``"bench": "mesh"`` — the multi-host scaling row next to the
+single-host frontier rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import socket
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+try:  # package-relative when run via benchmarks.run
+    from .common import Row, emit
+except ImportError:  # direct `python benchmarks/bench_mesh.py`
+    from common import Row, emit  # type: ignore
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_frontier.json")
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+# Worker body: argv = [pid, nproc, port, src, n, m, vals, delta_n, tau, kmax]
+_WORKER = r"""
+import json, sys, time
+import numpy as np
+sys.path.insert(0, sys.argv[4])
+pid, nproc, port = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+n, m, vals, delta_n = (int(a) for a in sys.argv[5:9])
+tau, kmax = int(sys.argv[9]), int(sys.argv[10])
+import jax
+jax.distributed.initialize(f"localhost:{port}", nproc, pid)
+from repro.core.collective import FleetCollective
+from repro.core.fleet import FleetPlacement
+from repro.core.placement import HostPlacement
+from repro.core.preprocess import set_row_group_collective
+from repro.launch.mesh import launch_env_summary
+from repro.service import FleetFrontend, MiningService, serve_fleet_peer
+
+fc = FleetCollective(timeout_s=120.0)
+set_row_group_collective(fc)
+svc = MiningService(placement=FleetPlacement(HostPlacement(), collective=fc))
+rng = np.random.default_rng(23)
+rows = rng.integers(0, vals, size=(n, m))
+delta = rng.integers(0, vals, size=(delta_n, m))
+
+if pid != 0:
+    out = serve_fleet_peer(svc, fc)
+    st = svc.store.stats()
+    print(json.dumps({
+        "pid": pid, "peer": out,
+        "store": {k: st[k] for k in ("n_rows", "n_words", "n_words_global", "shard")},
+        "collective": fc.stats(),
+        "env": launch_env_summary(),
+    }), flush=True)
+    sys.exit(0)
+
+front = FleetFrontend(svc, fc)  # no shadow: a bench failure should be loud
+t0 = time.perf_counter(); front.append(rows); t_append = time.perf_counter() - t0
+t0 = time.perf_counter(); r1 = front.mine(tau=tau, kmax=kmax); t_cold = time.perf_counter() - t0
+front.append(delta)
+t0 = time.perf_counter(); r2 = front.mine(tau=tau, kmax=kmax); t_inc = time.perf_counter() - t0
+st = svc.store.stats()
+front.close()
+print(json.dumps({
+    "pid": 0,
+    "t_append_s": t_append, "t_cold_mine_s": t_cold, "t_inc_mine_s": t_inc,
+    "r2_source": r2.source,
+    "n_itemsets": len(r1.result.itemsets),
+    "itemsets_sha": __import__("hashlib").sha256(
+        repr(sorted((tuple(map(int, i)), int(c))
+                    for i, c in r1.result.itemsets)).encode()).hexdigest(),
+    "store": {k: st[k] for k in ("n_rows", "n_words", "n_words_global", "shard")},
+    "collective": fc.stats(),
+    "env": launch_env_summary(),
+}), flush=True)
+"""
+
+
+def _spawn(pid: int, nproc: int, port: int, shape) -> subprocess.Popen:
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    # the forced-device-count flag from mesh CI jobs confuses distributed
+    # init on CPU; the per-worker env summary records whatever survives
+    env.pop("XLA_FLAGS", None)
+    argv = [sys.executable, "-c", _WORKER, str(pid), str(nproc), str(port), _SRC]
+    argv += [str(x) for x in shape]
+    return subprocess.Popen(
+        argv, stdout=subprocess.PIPE, stderr=subprocess.PIPE, env=env, text=True
+    )
+
+
+def _baseline(n, m, vals, delta_n, tau, kmax):
+    """Single-process reference: same data, same sequence, plain service."""
+    import hashlib
+
+    from repro.service import MiningService
+
+    rng = np.random.default_rng(23)
+    rows = rng.integers(0, vals, size=(n, m))
+    delta = rng.integers(0, vals, size=(delta_n, m))
+    svc = MiningService(engine="numpy")
+    svc.append(rows)
+    t0 = time.perf_counter(); r1 = svc.mine(tau=tau, kmax=kmax)
+    t_cold = time.perf_counter() - t0
+    svc.append(delta)
+    t0 = time.perf_counter(); svc.mine(tau=tau, kmax=kmax)
+    t_inc = time.perf_counter() - t0
+    sha = hashlib.sha256(
+        repr(sorted((tuple(map(int, i)), int(c))
+                    for i, c in r1.result.itemsets)).encode()
+    ).hexdigest()
+    svc.close()
+    return {"t_cold_mine_s": t_cold, "t_inc_mine_s": t_inc,
+            "n_itemsets": len(r1.result.itemsets), "itemsets_sha": sha}
+
+
+def run(*, nproc=2, n=4000, m=8, vals=6, delta_n=400, tau=40, kmax=3,
+        timeout_s=600):
+    port = _free_port()
+    shape = (n, m, vals, delta_n, tau, kmax)
+    procs = [_spawn(p, nproc, port, shape) for p in range(nproc)]
+    outs = []
+    for p in procs:
+        so, se = p.communicate(timeout=timeout_s)
+        if p.returncode != 0:
+            raise RuntimeError(f"fleet worker failed:\n{se[-3000:]}")
+        outs.append(json.loads(so.strip().splitlines()[-1]))
+    o0 = next(o for o in outs if o["pid"] == 0)
+    base = _baseline(n, m, vals, delta_n, tau, kmax)
+    if o0["itemsets_sha"] != base["itemsets_sha"]:
+        raise RuntimeError("fleet mine is not bit-identical to single-process")
+    if o0["r2_source"] != "incremental":
+        raise RuntimeError(f"fleet repeat mine took {o0['r2_source']!r} path")
+
+    levels_per_s = kmax / max(o0["t_cold_mine_s"], 1e-12)
+    sets_per_s = o0["n_itemsets"] / max(o0["t_cold_mine_s"], 1e-12)
+    rows_out = [
+        Row("mesh/fleet_cold_mine", o0["t_cold_mine_s"] * 1e6,
+            f"nproc={nproc} single={base['t_cold_mine_s']:.3f}s"),
+        Row("mesh/fleet_incremental_mine", o0["t_inc_mine_s"] * 1e6,
+            f"nproc={nproc} single={base['t_inc_mine_s']:.3f}s"),
+        Row("mesh/level_throughput", 1e6 / max(levels_per_s, 1e-12),
+            f"levels/s={levels_per_s:.2f} itemsets/s={sets_per_s:.0f}"),
+        Row("mesh/collective", o0["collective"]["seconds"] * 1e6,
+            f"rounds={o0['collective']['rounds']} "
+            f"bytes={o0['collective']['payload_bytes']}"),
+    ]
+    record = {
+        "meta": {
+            "bench": "mesh", "nproc": nproc, "n": n, "m": m, "vals": vals,
+            "delta_n": delta_n, "tau": tau, "kmax": kmax,
+            "timestamp": time.time(), "platform": platform.platform(),
+            "numpy": np.__version__,
+        },
+        "fleet": {
+            "bit_identical": True,
+            "cold_mine_s": o0["t_cold_mine_s"],
+            "incremental_mine_s": o0["t_inc_mine_s"],
+            "levels_per_s": levels_per_s,
+            "itemsets_per_s": sets_per_s,
+            "n_itemsets": o0["n_itemsets"],
+            "processes": [
+                {
+                    "pid": o["pid"],
+                    "store": o["store"],  # rows + local/global words per host
+                    "collective": o["collective"],
+                    "env": o["env"],  # XLA flags / allocator per host
+                }
+                for o in sorted(outs, key=lambda o: o["pid"])
+            ],
+        },
+        "single_process": base,
+    }
+    return rows_out, record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nproc", type=int, default=2)
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--m", type=int, default=8)
+    ap.add_argument("--vals", type=int, default=6)
+    ap.add_argument("--delta-n", type=int, default=400)
+    ap.add_argument("--tau", type=int, default=40)
+    ap.add_argument("--kmax", type=int, default=3)
+    ap.add_argument("--timeout-s", type=int, default=600)
+    args = ap.parse_args()
+    rows, record = run(
+        nproc=args.nproc, n=args.n, m=args.m, vals=args.vals,
+        delta_n=args.delta_n, tau=args.tau, kmax=args.kmax,
+        timeout_s=args.timeout_s,
+    )
+    emit(rows)
+    history = []
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            history = json.load(f)
+    history.append(record)
+    with open(OUT_PATH, "w") as f:
+        json.dump(history, f, indent=2)
+    print(f"wrote {OUT_PATH} ({len(history)} run(s))")
+
+
+if __name__ == "__main__":
+    main()

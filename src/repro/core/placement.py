@@ -560,6 +560,16 @@ class DevicePlacement:
         return f"DevicePlacement(engine={self.engine!r})"
 
 
+# Which (padded_words, bucket) shapes each mesh step-fn variant has already
+# traced. Mesh executables are shape-polymorphic jits (one EXEC_CACHE entry
+# per variant, retraced per input shape inside jax's own jit cache), so the
+# warm-bucket question — "which batch sizes are free?" — is answered by
+# *recording dispatched shapes* rather than enumerating cache keys the way
+# DevicePlacement does. Stale entries after an exec-cache reset are harmless:
+# a warm hint only changes padding, never results.
+_MESH_WARM: dict[tuple, set[tuple[int, int]]] = {}
+
+
 class MeshPlacement:
     """SPMD mesh: pairs shard over ``pair_axes``, words over ``word_axis``.
 
@@ -569,6 +579,16 @@ class MeshPlacement:
     :meth:`put_bits` must have a word count that is a multiple of
     :attr:`store_word_tile` (= the word-shard count) — the ``DatasetStore``
     aligns its tile to this, so serving a mesh never re-packs bits.
+
+    ``word_axis`` may be one axis name or a tuple of names — the hybrid
+    DCN x ICI layout shards words over both the in-host and the cross-host
+    axes.  A mesh whose devices span processes flips the placement into its
+    process-spanning variants: host arrays are placed shard-by-shard with
+    ``jax.make_array_from_callback`` (a plain ``device_put`` cannot address
+    remote shards), and the step bodies all-gather per-pair outputs over the
+    pair axes (``replicate=True`` in ``core.sharded``) so counts and class
+    codes materialize host-side on every process without touching
+    non-addressable shards.
     """
 
     kind = "mesh"
@@ -578,12 +598,12 @@ class MeshPlacement:
         mesh: Mesh,
         *,
         pair_axes: tuple[str, ...] = ("data",),
-        word_axis: str | None = None,
+        word_axis: str | tuple[str, ...] | None = None,
         device_frontier: bool | None = None,
     ):
         self.mesh = mesh
         self.pair_axes = tuple(pair_axes)
-        self.word_axis = word_axis
+        self.word_axis = tuple(word_axis) if isinstance(word_axis, list) else word_axis
         # mesh frontier ops re-shard stored children between levels, so each
         # batch runs a handful of small collectives (partition cumsum, child
         # all-gather). Real accelerator backends do these in microseconds;
@@ -596,11 +616,28 @@ class MeshPlacement:
             else device_frontier
         )
         self.pair_shards = int(np.prod([mesh.shape[a] for a in self.pair_axes]))
-        self.word_shards = int(mesh.shape[word_axis]) if word_axis else 1
+        word_axes = (
+            (word_axis,) if isinstance(word_axis, str) else tuple(word_axis or ())
+        )
+        self.word_shards = int(np.prod([mesh.shape[a] for a in word_axes])) if word_axes else 1
         self.store_word_tile = self.word_shards
-        self._bits_sharding = NamedSharding(mesh, P(None, word_axis))
+        self.spans_processes = (
+            len({d.process_index for d in mesh.devices.flat}) > 1
+        )
+        self._bits_sharding = NamedSharding(mesh, P(None, self.word_axis))
         self._pairs_sharding = NamedSharding(mesh, P(self.pair_axes, None))
         self._minp_sharding = NamedSharding(mesh, P(self.pair_axes))
+
+    def _put(self, arr, sharding):
+        """Place one array under ``sharding`` — the process-spanning variant
+        assembles it from per-shard callbacks (every process feeds its own
+        addressable shards from the replicated host copy)."""
+        if self.spans_processes and not isinstance(arr, jax.Array):
+            host = np.asarray(arr)
+            return jax.make_array_from_callback(
+                host.shape, sharding, lambda idx: host[idx]
+            )
+        return jax.device_put(arr, sharding)
 
     # the jitted shard_map bodies are bound once per (mesh, axes, variant)
     # through EXEC_CACHE, so executables are shared across levels, placements
@@ -608,7 +645,16 @@ class MeshPlacement:
     def _step_fn(self, fused: bool, write_children: bool):
         from . import sharded as _sh
 
-        key = ("mesh", self.mesh, self.pair_axes, self.word_axis, fused, write_children)
+        replicate = self.spans_processes
+        key = (
+            "mesh",
+            self.mesh,
+            self.pair_axes,
+            self.word_axis,
+            fused,
+            write_children,
+            replicate,
+        )
 
         def build():
             if fused:
@@ -622,7 +668,10 @@ class MeshPlacement:
                     _sh.sharded_level_step if write_children else _sh.sharded_level_count_step
                 )
             fn, _, _ = builder(
-                self.mesh, pair_axes=self.pair_axes, word_axis=self.word_axis
+                self.mesh,
+                pair_axes=self.pair_axes,
+                word_axis=self.word_axis,
+                replicate=replicate,
             )
             return fn
 
@@ -647,18 +696,31 @@ class MeshPlacement:
         padded_m, _ = balanced_blocks(bucket, self.pair_shards)
         return padded_m
 
+    def _warm_key(self, fused: bool, write_children: bool) -> tuple:
+        return ("mesh", self.mesh, self.pair_axes, self.word_axis, fused, write_children)
+
     def warm_buckets(
         self, n_words: int, *, fused: bool, write_children: bool
     ) -> tuple[int, ...]:
-        # mesh step fns are shape-polymorphic jits keyed by variant only —
-        # there is no per-bucket executable to chase
-        return ()
+        # mesh step fns are shape-polymorphic jits, so "warm" means "this
+        # (words, bucket) shape was already traced" — dispatched shapes are
+        # recorded in _MESH_WARM (see its note). Queries arrive at the
+        # store's word count; executables trace at the shard-padded width.
+        pw = n_words + (-n_words) % max(self.word_shards, 1)
+        shapes = _MESH_WARM.get(self._warm_key(fused, write_children), ())
+        return tuple(sorted(b for w, b in shapes if w == pw))
 
     def dispatch(self, state, padded_pairs, write_children: bool):
         _guard("dispatch", "mesh")
         bits, pc, pc_dev, tau, fused, _owned = state
         device_pairs = isinstance(padded_pairs, jax.Array)
-        pairs_j = jax.device_put(jnp.asarray(padded_pairs), self._pairs_sharding)
+        pairs_j = self._put(
+            padded_pairs if device_pairs else np.ascontiguousarray(padded_pairs),
+            self._pairs_sharding,
+        )
+        _MESH_WARM.setdefault(self._warm_key(fused, write_children), set()).add(
+            (int(bits.shape[1]), int(padded_pairs.shape[0]))
+        )
         if not fused:
             fn = self._step_fn(False, write_children)
             if write_children:
@@ -671,9 +733,12 @@ class MeshPlacement:
         # their minp gathers from the resident count copy.
         if device_pairs:
             minp = jnp.minimum(pc_dev[padded_pairs[:, 0]], pc_dev[padded_pairs[:, 1]])
+            minp_j = jax.device_put(minp, self._minp_sharding)
         else:
-            minp = jnp.asarray(np.minimum(pc[padded_pairs[:, 0]], pc[padded_pairs[:, 1]]))
-        minp_j = jax.device_put(minp, self._minp_sharding)
+            minp_j = self._put(
+                np.minimum(pc[padded_pairs[:, 0]], pc[padded_pairs[:, 1]]),
+                self._minp_sharding,
+            )
         fn = self._step_fn(True, write_children)
         if write_children:
             return fn(bits, pairs_j, minp_j, tau)
@@ -689,7 +754,7 @@ class MeshPlacement:
             from .sharded import pad_words
 
             bits = pad_words(np.ascontiguousarray(bits), self.word_shards)
-        return jax.device_put(bits, self._bits_sharding)
+        return self._put(bits, self._bits_sharding)
 
     def prepare_coverage(self, bits):
         return self.put_bits(bits)
@@ -710,8 +775,8 @@ class MeshPlacement:
                 n_set_items=width,
             )[0],
         )
-        sets_j = jax.device_put(jnp.asarray(padded_sets), self._pairs_sharding)
-        wt_j = jax.device_put(jnp.asarray(padded_weights), self._minp_sharding)
+        sets_j = self._put(np.ascontiguousarray(padded_sets), self._pairs_sharding)
+        wt_j = self._put(np.ascontiguousarray(padded_weights), self._minp_sharding)
         return fn(state, sets_j, wt_j)
 
     # -- frontier -----------------------------------------------------------
@@ -730,8 +795,8 @@ class MeshPlacement:
             "t_pad": t_pad,
             # id/key tables replicate over the mesh (the shared-memory
             # analogue); only the pair axis of the support test shards
-            "ids": jax.device_put(jnp.asarray(ids), repl),
-            "keys": jax.device_put(jnp.asarray(keys), repl),
+            "ids": self._put(np.asarray(ids), repl),
+            "keys": self._put(np.asarray(keys), repl),
             "reps": group_reps(itemsets).astype(np.int32),
         }
 
@@ -759,6 +824,7 @@ class MeshPlacement:
             state["n_symbols"],
             state["t_pad"],
             bucket,
+            self.spans_processes,
         )
         fn = _fops.EXEC_CACHE.get(
             key,
@@ -769,10 +835,17 @@ class MeshPlacement:
                 t_pad=state["t_pad"],
                 bits=bits_,
                 ipw=ipw,
+                replicate=self.spans_processes,
             )[0],
         )
-        pairs_sh = jax.device_put(pairs, self._pairs_sharding)
-        valid_sh = jax.device_put(valid, self._minp_sharding)
+        if self.spans_processes:
+            # generated on the default device; re-place shard-by-shard (a
+            # cross-process device_put reshard is not addressable)
+            pairs_sh = self._put(np.asarray(pairs), self._pairs_sharding)
+            valid_sh = self._put(np.asarray(valid), self._minp_sharding)
+        else:
+            pairs_sh = jax.device_put(pairs, self._pairs_sharding)
+            valid_sh = jax.device_put(valid, self._minp_sharding)
         ok = fn(state["ids"], state["keys"], pairs_sh, valid_sh)
         return pairs, ok
 
@@ -810,9 +883,14 @@ class MeshPlacement:
             "devices": int(np.prod(list(self.mesh.shape.values()))),
             "mesh_shape": dict(self.mesh.shape),
             "pair_axes": list(self.pair_axes),
-            "word_axis": self.word_axis,
+            "word_axis": (
+                list(self.word_axis)
+                if isinstance(self.word_axis, tuple)
+                else self.word_axis
+            ),
             "pair_shards": self.pair_shards,
             "word_shards": self.word_shards,
+            "spans_processes": self.spans_processes,
         }
 
     def __repr__(self) -> str:

@@ -62,12 +62,34 @@ def pad_words(bits: np.ndarray, multiple: int) -> np.ndarray:
     return np.concatenate([bits, np.zeros((t, rem), dtype=bits.dtype)], axis=1)
 
 
-def _local_intersect(bits_ref, pairs, *, word_axis: str | None, write_children: bool):
+# Word axes may be a single ICI axis name ("model") or a tuple of axis
+# names for hybrid DCN x ICI meshes (PartitionSpec and psum/all_gather both
+# accept tuples, flattening major-to-minor in tuple order).
+WordAxes = "str | tuple[str, ...] | None"
+
+
+def _replicate_pairs_dim(x, pair_axes):
+    """All-gather a pair-sharded per-pair vector back to the full batch.
+
+    The tiled gather concatenates shards in flattened (major-to-minor)
+    pair-axis index order — the same order ``P(pair_axes)`` splits them, so
+    the result equals the out-spec reassembly but lands **replicated**:
+    on a process-spanning mesh every host can read it without a
+    cross-process transfer at materialization time.
+    """
+    return jax.lax.all_gather(x, pair_axes, axis=0, tiled=True)
+
+
+def _local_intersect(
+    bits_ref, pairs, *, word_axis, pair_axes, write_children: bool, replicate: bool
+):
     a = jnp.take(bits_ref, pairs[:, 0], axis=0)
     b = jnp.take(bits_ref, pairs[:, 1], axis=0)
     child = jnp.bitwise_and(a, b)
     partial = jnp.sum(jax.lax.population_count(child).astype(jnp.int32), axis=1)
     counts = jax.lax.psum(partial, word_axis) if word_axis else partial
+    if replicate:
+        counts = _replicate_pairs_dim(counts, pair_axes)
     if write_children:
         return child, counts
     return counts
@@ -77,18 +99,30 @@ def sharded_level_step(
     mesh: Mesh,
     *,
     pair_axes: tuple[str, ...] = ("data",),
-    word_axis: str | None = "model",
+    word_axis: "WordAxes" = "model",
+    replicate: bool = False,
 ):
     """Build the write-variant level body: (bits, pairs) -> (child, counts).
 
     bits: (t, W) uint32, sharded P(None, word_axis);
     pairs: (M, 2) int32, sharded P(pair_axes, None);
     child: (M, W), sharded P(pair_axes, word_axis); counts: (M,) P(pair_axes).
+
+    ``replicate=True`` is the process-spanning variant: counts come back
+    replicated (out-spec ``P()``) via a tiled pair-axis all-gather, so a
+    multi-host coordinator can materialize them host-side without touching
+    non-addressable shards. Children stay pair/word sharded either way.
     """
     in_specs = (P(None, word_axis), P(pair_axes, None))
-    out_specs = (P(pair_axes, word_axis), P(pair_axes))
+    out_specs = (P(pair_axes, word_axis), P() if replicate else P(pair_axes))
     fn = shard_map(
-        functools.partial(_local_intersect, word_axis=word_axis, write_children=True),
+        functools.partial(
+            _local_intersect,
+            word_axis=word_axis,
+            pair_axes=pair_axes,
+            write_children=True,
+            replicate=replicate,
+        ),
         mesh=mesh,
         in_specs=in_specs,
         out_specs=out_specs,
@@ -100,13 +134,20 @@ def sharded_level_count_step(
     mesh: Mesh,
     *,
     pair_axes: tuple[str, ...] = ("data",),
-    word_axis: str | None = "model",
+    word_axis: "WordAxes" = "model",
+    replicate: bool = False,
 ):
     """Count-only (k = k_max) level body: (bits, pairs) -> counts."""
     in_specs = (P(None, word_axis), P(pair_axes, None))
-    out_specs = P(pair_axes)
+    out_specs = P() if replicate else P(pair_axes)
     fn = shard_map(
-        functools.partial(_local_intersect, word_axis=word_axis, write_children=False),
+        functools.partial(
+            _local_intersect,
+            word_axis=word_axis,
+            pair_axes=pair_axes,
+            write_children=False,
+            replicate=replicate,
+        ),
         mesh=mesh,
         in_specs=in_specs,
         out_specs=out_specs,
@@ -115,14 +156,23 @@ def sharded_level_count_step(
 
 
 def _local_intersect_classify(
-    bits_ref, pairs, minp, tau, *, word_axis: str | None, write_children: bool
+    bits_ref,
+    pairs,
+    minp,
+    tau,
+    *,
+    word_axis,
+    pair_axes,
+    write_children: bool,
+    replicate: bool,
 ):
     """Shard-local fused body: gather, AND, popcount(+psum), classify.
 
     ``minp`` is the per-pair min parent popcount (sharded with the pairs);
     classification runs after the word-axis ``psum`` so every pair shard
     classifies its own pairs from complete counts — still no inter-device
-    communication beyond the popcount psum.
+    communication beyond the popcount psum (plus, in the process-spanning
+    ``replicate`` variant, the pair-axis all-gather of the per-pair outputs).
     """
     a = jnp.take(bits_ref, pairs[:, 0], axis=0)
     b = jnp.take(bits_ref, pairs[:, 1], axis=0)
@@ -132,6 +182,9 @@ def _local_intersect_classify(
     skip = (counts == 0) | (counts == minp)
     emit = jnp.logical_not(skip) & (counts <= tau)
     classes = jnp.where(skip, 0, jnp.where(emit, 1, 2)).astype(jnp.int32)
+    if replicate:
+        counts = _replicate_pairs_dim(counts, pair_axes)
+        classes = _replicate_pairs_dim(classes, pair_axes)
     if write_children:
         return child, counts, classes
     return counts, classes
@@ -141,15 +194,21 @@ def sharded_level_classify_step(
     mesh: Mesh,
     *,
     pair_axes: tuple[str, ...] = ("data",),
-    word_axis: str | None = "model",
+    word_axis: "WordAxes" = "model",
+    replicate: bool = False,
 ):
     """Fused write-variant level body: (bits, pairs, minp, tau) ->
     (child, counts, classes)."""
     in_specs = (P(None, word_axis), P(pair_axes, None), P(pair_axes), P())
-    out_specs = (P(pair_axes, word_axis), P(pair_axes), P(pair_axes))
+    per_pair = P() if replicate else P(pair_axes)
+    out_specs = (P(pair_axes, word_axis), per_pair, per_pair)
     fn = shard_map(
         functools.partial(
-            _local_intersect_classify, word_axis=word_axis, write_children=True
+            _local_intersect_classify,
+            word_axis=word_axis,
+            pair_axes=pair_axes,
+            write_children=True,
+            replicate=replicate,
         ),
         mesh=mesh,
         in_specs=in_specs,
@@ -162,15 +221,21 @@ def sharded_level_classify_count_step(
     mesh: Mesh,
     *,
     pair_axes: tuple[str, ...] = ("data",),
-    word_axis: str | None = "model",
+    word_axis: "WordAxes" = "model",
+    replicate: bool = False,
 ):
     """Fused count-only (k = k_max) level body: (bits, pairs, minp, tau) ->
     (counts, classes)."""
     in_specs = (P(None, word_axis), P(pair_axes, None), P(pair_axes), P())
-    out_specs = (P(pair_axes), P(pair_axes))
+    per_pair = P() if replicate else P(pair_axes)
+    out_specs = (per_pair, per_pair)
     fn = shard_map(
         functools.partial(
-            _local_intersect_classify, word_axis=word_axis, write_children=False
+            _local_intersect_classify,
+            word_axis=word_axis,
+            pair_axes=pair_axes,
+            write_children=False,
+            replicate=replicate,
         ),
         mesh=mesh,
         in_specs=in_specs,
@@ -232,6 +297,7 @@ def sharded_frontier_support_step(
     t_pad: int = 16,
     bits: int = 1,
     ipw: int = 1,
+    replicate: bool = False,
 ):
     """Frontier support-test body, sharded over the pair axes:
     (ids, keys, pairs, valid) -> ok.
@@ -243,16 +309,19 @@ def sharded_frontier_support_step(
     P(pair_axes); ok: (M,) bool P(pair_axes). Each pair shard binary-searches
     its own candidates' prefix-drop subsets — no collective at all (the
     paper's "no inter-thread communication" §4.4.4 holds exactly here).
+    ``replicate=True`` (process-spanning meshes) all-gathers ``ok`` back to
+    the full batch so every host can partition it locally.
     """
     from ..kernels.frontier.frontier import support_ok_body
 
     in_specs = (P(None, None), P(None, None), P(pair_axes, None), P(pair_axes))
-    out_specs = P(pair_axes)
+    out_specs = P() if replicate else P(pair_axes)
 
     def body(ids, keys, pairs, valid):
-        return support_ok_body(
+        ok = support_ok_body(
             ids, keys, pairs, valid, k=k, t_pad=t_pad, bits=bits, ipw=ipw
         )
+        return _replicate_pairs_dim(ok, pair_axes) if replicate else ok
 
     fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return jax.jit(fn), in_specs, out_specs

@@ -511,6 +511,21 @@ def main() -> None:
     ap.add_argument("--no-flight", action="store_true",
                     help="disable the crash-persistent flight recorder "
                          "(only meaningful with --wal-dir)")
+    ap.add_argument("--coordinator-address", default=None,
+                    help="host:port rendezvous for the multi-host fleet "
+                         "(jax.distributed.initialize)")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="fleet size; each process stores only its word "
+                         "stripes and process 0 binds HTTP")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this process's fleet index (0 = coordinator)")
+    ap.add_argument("--fleet-timeout-s", type=float, default=60.0,
+                    help="deadline for a peer's collective round; a miss "
+                         "degrades the fleet to single-host")
+    ap.add_argument("--no-shadow", action="store_true",
+                    help="skip the coordinator's full-copy shadow service "
+                         "(halves its memory; peer death then fails "
+                         "requests instead of degrading)")
     ap.add_argument("--flight-fsync-s", type=float, default=0.25,
                     help="flight-recorder flush/fsync cadence; checkpoints "
                          "and config events always fsync inline")
@@ -523,6 +538,15 @@ def main() -> None:
         max_traces=args.trace_max, sample_every=args.trace_sample
     )
 
+    # multi-host fleet bootstrap (before any jax device use): join the
+    # rendezvous, then wrap the in-host placement into a FleetPlacement so
+    # every popcount batch all-reduces over the DCN collective
+    from .mesh import distributed_init
+
+    pid, nproc = distributed_init(
+        args.coordinator_address, args.num_processes, args.process_id
+    )
+
     placement = None
     if args.mesh:
         from ..core.placement import MeshPlacement
@@ -532,13 +556,32 @@ def main() -> None:
             mesh_from_spec(args.mesh), pair_axes=("data",), word_axis="model"
         )
 
+    fleet_collective = None
+    if nproc > 1:
+        from ..core.collective import FleetCollective
+        from ..core.fleet import FleetPlacement
+        from ..core.placement import resolve_placement
+        from ..core.preprocess import set_row_group_collective
+        from ..core.kyiv import KyivConfig
+
+        fleet_collective = FleetCollective(timeout_s=args.fleet_timeout_s)
+        set_row_group_collective(fleet_collective)
+        inner = placement or resolve_placement(KyivConfig(engine=args.engine))
+        placement = FleetPlacement(inner, collective=fleet_collective)
+
+    # per-host durability: each process journals and snapshots only its own
+    # stripes; a fleet restart recovers every shard locally, in parallel
+    wal_dir = args.wal_dir
+    if wal_dir is not None and nproc > 1:
+        wal_dir = os.path.join(wal_dir, f"p{pid}")
+
     service = MiningService(
         engine=args.engine,
         placement=placement,
         cache_capacity=args.cache_capacity,
         cache_max_bytes=args.cache_max_bytes,
         compact_threshold=args.compact_threshold,
-        wal_dir=args.wal_dir,
+        wal_dir=wal_dir,
         snapshot_every=args.snapshot_every,
         incremental=IncrementalConfig(max_delta_fraction=args.max_delta_fraction),
         profile_dir=args.profile_dir,
@@ -547,6 +590,36 @@ def main() -> None:
         flight_fsync_s=args.flight_fsync_s,
         flight_max_bytes=args.flight_max_bytes,
     )
+
+    if nproc > 1:
+        from ..service.fleet import FleetFrontend, serve_fleet_peer
+
+        if pid != 0:
+            # peer process: no HTTP, no preload — rows and requests arrive
+            # over the command bus until the coordinator broadcasts shutdown
+            _log.info(
+                "fleet peer p%d/%d entering command loop", pid, nproc,
+                extra={"event": "fleet-peer", "pid": pid},
+            )
+            summary = serve_fleet_peer(service, fleet_collective)
+            service.close()
+            _log.info(
+                "fleet peer p%d stopped (%s, %d ops)",
+                pid, summary["reason"], summary["executed"],
+                extra={"event": "fleet-peer-stop", **summary},
+            )
+            return
+        shadow = None
+        if not args.no_shadow:
+            shadow = MiningService(
+                engine=args.engine,
+                cache_capacity=args.cache_capacity,
+                incremental=IncrementalConfig(
+                    max_delta_fraction=args.max_delta_fraction
+                ),
+            )
+        service = FleetFrontend(service, fleet_collective, shadow=shadow)
+
     if args.preload == "randomized":
         from ..data.synth import randomized_dataset
 

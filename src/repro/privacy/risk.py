@@ -126,6 +126,7 @@ def risk_profile(
     *,
     placement=None,
     max_batch_sets: int | None = None,
+    word_map=None,
 ) -> RiskProfile:
     """Compute the record-risk profile of a mining result.
 
@@ -135,6 +136,13 @@ def risk_profile(
     defaults to
     the mining config's own (``resolve_placement``), so service calls reuse
     the already-resident placement.
+
+    Under a fleet placement the table bits are process-local word stripes,
+    so the accumulator is local too; a placement exposing
+    ``record_counts_from_acc`` (``core.fleet.FleetPlacement``) turns it into
+    global per-record counts — scatter through the store's ``word_map``
+    plus one all-reduce per arity. All derived scores are then global and
+    identical on every process.
     """
     table = result.prep.table
     config = result.config
@@ -154,9 +162,13 @@ def risk_profile(
             set_width=kmax,
             max_batch_sets=max_batch_sets,
         )
+        to_global = getattr(placement, "record_counts_from_acc", None)
         for k, sets in sorted(sets_by_size.items()):
             acc = engine.accumulate(np.asarray(sets, dtype=np.int32))
-            counts_by_size[k - 1] = acc_to_record_counts(acc, n)
+            if to_global is not None:
+                counts_by_size[k - 1] = to_global(acc, n, word_map)
+            else:
+                counts_by_size[k - 1] = acc_to_record_counts(acc, n)
 
     qi_count = counts_by_size.sum(axis=0)
     min_qi_size = np.zeros(n, dtype=np.int64)

@@ -18,7 +18,13 @@ from ..sampling import SamplingConfig
 from .api import DeadlineExceeded, MineResponse, MiningService, NotReadyError
 from .cache import CacheEntry, ResultCache, make_approx_key, make_key
 from .faults import DeviceFault, FaultInjector, KillPoint, placement_faults
-from .incremental import IncrementalConfig, delta_support, mine_incremental
+from .fleet import FleetFrontend, FleetOpError, serve_fleet_peer
+from .incremental import (
+    IncrementalConfig,
+    ResultBands,
+    delta_support,
+    mine_incremental,
+)
 from .resilience import CircuitBreaker, ResilienceConfig
 from .scheduler import RequestScheduler
 from .store import DatasetStore
@@ -32,6 +38,8 @@ __all__ = [
     "DeviceFault",
     "DurableStore",
     "FaultInjector",
+    "FleetFrontend",
+    "FleetOpError",
     "IncrementalConfig",
     "KillPoint",
     "MineResponse",
@@ -39,6 +47,7 @@ __all__ = [
     "NotReadyError",
     "RequestScheduler",
     "ResilienceConfig",
+    "ResultBands",
     "ResultCache",
     "SamplingConfig",
     "WriteAheadLog",
@@ -47,4 +56,5 @@ __all__ = [
     "make_key",
     "mine_incremental",
     "placement_faults",
+    "serve_fleet_peer",
 ]

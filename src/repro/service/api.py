@@ -53,7 +53,7 @@ from ..sampling.refine import recount_supports
 from ..sdc.quasi import QuasiIdentifierReport, report_as_dict
 from .cache import CacheEntry, ResultCache, make_approx_key, make_key
 from .faults import NULL_INJECTOR
-from .incremental import IncrementalConfig, mine_incremental
+from .incremental import IncrementalConfig, ResultBands, mine_incremental
 from .resilience import CircuitBreaker, ResilienceConfig
 from .scheduler import RequestScheduler
 from .store import DatasetStore
@@ -251,6 +251,9 @@ class MiningService:
             placement=self.placement,
             compact_threshold=compact_threshold,
             keep_versions=keep_versions,
+            # fleet placements carry (pid, nproc): the store keeps only this
+            # process's word stripes and global padding stays process-invariant
+            shard=getattr(self.placement, "shard", None),
         )
         self.injector = fault_injector or NULL_INJECTOR
         self.resilience = resilience or ResilienceConfig()
@@ -741,6 +744,10 @@ class MiningService:
                                 and self.incremental.enabled
                                 else None
                             ),
+                            # count-sorted recount companion persisted with
+                            # the base entry: recounting touches only the
+                            # near-boundary band, not all cached itemsets
+                            bands=base.bands,
                         )
                 except Exception as exc:
                     if not is_device_failure(exc):
@@ -770,7 +777,11 @@ class MiningService:
                             itemsets_emitted=len(result.itemsets),
                         )
                     entry = CacheEntry(
-                        key=key, result=result, source="incremental", info=info
+                        key=key,
+                        result=result,
+                        source="incremental",
+                        info=info,
+                        bands=ResultBands.from_result(result.itemsets),
                     )
                     self.cache.put(entry)
                     return entry
@@ -793,7 +804,13 @@ class MiningService:
                 # never cache it and never let the incremental miner build on it
                 info["interrupted"] = result.interrupted
                 return CacheEntry(key=key, result=result, source="partial", info=info)
-            entry = CacheEntry(key=key, result=result, source="cold", info=info)
+            entry = CacheEntry(
+                key=key,
+                result=result,
+                source="cold",
+                info=info,
+                bands=ResultBands.from_result(result.itemsets),
+            )
             self.cache.put(entry)
             return entry
         finally:
@@ -1200,7 +1217,15 @@ class MiningService:
         profile = self._privacy.get(key)
         if profile is not None:
             return profile, "privacy-cache"
-        profile = risk_profile(resp.result, placement=self.placement)
+        store = self.store
+        shard = tuple(getattr(store, "shard", (0, 1)))
+        profile = risk_profile(
+            resp.result,
+            placement=self.placement,
+            # process-sharded store: the coverage accumulator is local-width;
+            # the fleet placement scatters it to global rows via this map
+            word_map=store.word_map() if shard[1] > 1 else None,
+        )
         self._privacy.put(key, profile)
         return profile, resp.source
 

@@ -75,6 +75,11 @@ class CacheEntry:
     info: dict
     created_at: float = dataclasses.field(default_factory=time.time)
     hits: int = 0
+    # near-boundary recount companion (service.incremental.ResultBands):
+    # count-sorted per-arity matrices persisted beside the result so an
+    # append-burst recount touches only the (tau, tau+d] band instead of
+    # rebuilding the sort for all cached itemsets on every delta
+    bands: object | None = None
 
     @property
     def version(self) -> int:
@@ -99,6 +104,8 @@ class CacheEntry:
         bits = getattr(getattr(prep, "table", None), "bits", None)
         if bits is not None and hasattr(bits, "nbytes"):
             total += int(bits.nbytes)
+        if self.bands is not None:
+            total += int(self.bands.nbytes())
         return total
 
 

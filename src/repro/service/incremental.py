@@ -44,6 +44,25 @@ Past a configurable delta fraction — or if the boundary band turns out not
 to be thin (expansion budget exhausted) — ``mine_incremental`` signals the
 caller to fall back to a cold ``mine()``; the result is bit-identical either
 way (property-tested against cold mining in ``tests/test_incremental.py``).
+
+Two refinements ride on top of the base scheme:
+
+* **Near-boundary bands** (:class:`ResultBands`): the result cache persists
+  per-arity, count-sorted matrices of the cached itemsets. At recount time
+  the per-item delta frequencies bound each cached itemset's delta support
+  from above (``ub = min dfreq over members``); ``ub == 0`` proves the delta
+  support is exactly 0, so only itemsets whose *every* member actually
+  appears in the appended rows pay the bitset AND — the recount floor is
+  delta-proportional instead of O(|cached results|), and the promotion scan
+  is confined to the ``(τ - d, τ]`` band the sorted counts expose.
+* **Fleet mode**: when the store is process-sharded and ``placement`` is a
+  :class:`~repro.core.fleet.FleetPlacement`, every popcount in this module
+  is a partial sum over local word stripes. All count vectors funnel
+  through one ``allreduce_sum`` per stage (recount, expansion minimality,
+  delta-born classification), delta-born candidates are unioned by one
+  all-gather (each process only sees its own delta rows), and budget
+  decisions are taken on the *global* pool so every process falls back —
+  or doesn't — in lockstep.
 """
 
 from __future__ import annotations
@@ -57,9 +76,9 @@ from ..core.bitops import popcount_rows
 from ..core.items import ItemTable
 from ..core.kyiv import KyivConfig, LevelStats, MiningResult
 from ..core.preprocess import Preprocessed
-from .store import DatasetStore, mask_delta_words
+from .store import DatasetStore, mask_delta_words, mask_delta_words_local
 
-__all__ = ["IncrementalConfig", "mine_incremental", "delta_support"]
+__all__ = ["IncrementalConfig", "ResultBands", "mine_incremental", "delta_support"]
 
 
 @dataclasses.dataclass
@@ -78,10 +97,16 @@ class IncrementalConfig:
     enabled: bool = True
 
 
-def _delta_bits_of(table: ItemTable, base_rows: int) -> np.ndarray:
+def _delta_bits_of(
+    table: ItemTable, base_rows: int, word_map: np.ndarray | None = None
+) -> np.ndarray:
     """Delta-row bitsets derived from an immutable snapshot table (same
     contract as ``DatasetStore.delta_bits``, but safe against appends that
-    land while this mining request is running)."""
+    land while this mining request is running). ``word_map`` marks the
+    snapshot as process-sharded: delta words are scattered round-robin, so
+    the full local width is kept and pre-existing rows are zeroed in place."""
+    if word_map is not None:
+        return mask_delta_words_local(table.bits, base_rows, word_map)
     return mask_delta_words(table.bits, base_rows)[0]
 
 
@@ -103,6 +128,96 @@ def delta_support(
         inter = np.bitwise_and.reduce(dbits[mat], axis=1)  # (r, Wd)
         out[idxs] = popcount_rows(inter)
     return out
+
+
+@dataclasses.dataclass
+class ResultBands:
+    """Per-arity, count-sorted views of a cached result set.
+
+    Built once when a mining result enters the cache and persisted beside
+    it (``CacheEntry.bands``), so an append burst pays only the recount this
+    structure admits: ``recount`` bounds each itemset's delta support by the
+    minimum delta frequency of its members and runs the exact bitset AND
+    only where that bound is non-zero; the ascending base counts confine
+    promotion candidates to the thin ``(τ - d, τ]`` boundary band.
+    """
+
+    mats: dict[int, np.ndarray]  # arity -> (r, k) int64 ids, count-ascending
+    counts: dict[int, np.ndarray]  # arity -> (r,) int64 base counts, ascending
+    index: dict[int, np.ndarray]  # arity -> (r,) position in cached order
+
+    @classmethod
+    def from_result(cls, itemsets: list[tuple[tuple[int, ...], int]]) -> "ResultBands":
+        by_k: dict[int, list[tuple[int, tuple[int, ...], int]]] = {}
+        for pos, (ids, cnt) in enumerate(itemsets):
+            by_k.setdefault(len(ids), []).append((pos, ids, cnt))
+        mats, counts, index = {}, {}, {}
+        for k, rows in by_k.items():
+            cnt = np.asarray([c for _, _, c in rows], dtype=np.int64)
+            order = np.argsort(cnt, kind="stable")
+            mats[k] = np.asarray([ids for _, ids, _ in rows], dtype=np.int64)[order]
+            counts[k] = cnt[order]
+            index[k] = np.asarray([p for p, _, _ in rows], dtype=np.int64)[order]
+        return cls(mats=mats, counts=counts, index=index)
+
+    def nbytes(self) -> int:
+        return sum(
+            a.nbytes
+            for d in (self.mats, self.counts, self.index)
+            for a in d.values()
+        )
+
+    def recount(
+        self,
+        dbits: np.ndarray,
+        dfreq: np.ndarray,
+        tau: int,
+        d: int,
+        reduce_fn=None,
+    ) -> tuple[np.ndarray, dict]:
+        """New (base + delta) support of every cached itemset, in cached
+        order, touching bitsets only where the ``dfreq`` upper bound admits a
+        non-zero delta. ``dfreq`` must be the *global* per-item delta
+        frequency; under a fleet ``reduce_fn`` sums the partial popcounts
+        (one collective for all arities — the upper-bound filter is computed
+        from global values, so every process recounts the identical rows).
+        Returns ``(new_counts, stats)``."""
+        total = sum(len(c) for c in self.counts.values())
+        new = np.zeros(total, dtype=np.int64)
+        n_recounted = 0
+        n_band = 0
+        chunks: list[tuple[int, np.ndarray, np.ndarray]] = []
+        for k in sorted(self.mats):
+            mat, cnt = self.mats[k], self.counts[k]
+            if len(cnt) == 0:
+                continue
+            # ascending base counts: everything past this point could cross τ
+            n_band += len(cnt) - int(np.searchsorted(cnt, tau - d, side="right"))
+            if k == 1:
+                # singleton delta support IS the delta frequency — no AND
+                new[self.index[k]] = cnt + dfreq[mat[:, 0]]
+                continue
+            ub = dfreq[mat].min(axis=1)
+            need = np.nonzero(ub > 0)[0]
+            n_recounted += len(need)
+            new[self.index[k]] = cnt  # ub == 0 rows are exact as-is
+            if len(need):
+                inter = np.bitwise_and.reduce(dbits[mat[need]], axis=1)
+                chunks.append((k, need, popcount_rows(inter).astype(np.int64)))
+        if chunks:
+            flat = np.concatenate([c for _, _, c in chunks])
+            if reduce_fn is not None:
+                flat = reduce_fn(flat)
+            off = 0
+            for k, need, c in chunks:
+                new[self.index[k][need]] += flat[off : off + len(need)]
+                off += len(need)
+        stats = {
+            "n_recounted": n_recounted,
+            "n_recount_skipped": total - n_recounted,
+            "n_promotion_band": n_band,
+        }
+        return new, stats
 
 
 def _itemset_support(bits: np.ndarray, ids: tuple[int, ...]) -> int:
@@ -127,6 +242,68 @@ def _is_minimal(
     return True
 
 
+def _filter_minimal(
+    table: ItemTable, cands: dict[frozenset, int], tau: int, reduce_fn=None
+) -> dict[frozenset, int]:
+    """Keep the minimal members of a τ-infrequent candidate pool, batched.
+
+    Every distinct (|S|-1)-subset across all arity ≥ 3 candidates is counted
+    once in one vectorised pass — under a fleet that is a single partial-
+    popcount all-reduce instead of one per leave-one-out probe (the
+    per-candidate ``_is_minimal`` would be a collective per subset).
+    Arity 1 is minimal by definition; arity 2 checks global frequencies.
+    """
+    freq = table.freq
+    bits = table.bits
+    sub_index: dict[tuple[int, ...], int] = {}
+    sub_list: list[tuple[int, ...]] = []
+    refs_of: dict[frozenset, list[int]] = {}
+    for cs in cands:
+        if len(cs) <= 2:
+            continue
+        ids = tuple(sorted(cs))
+        refs = []
+        for drop in range(len(ids)):
+            sub = ids[:drop] + ids[drop + 1 :]
+            ix = sub_index.get(sub)
+            if ix is None:
+                ix = len(sub_list)
+                sub_index[sub] = ix
+                sub_list.append(sub)
+            refs.append(ix)
+        refs_of[cs] = refs
+    sup = np.zeros(len(sub_list), dtype=np.int64)
+    if sub_list:
+        by_k: dict[int, list[int]] = {}
+        for ix, sub in enumerate(sub_list):
+            by_k.setdefault(len(sub), []).append(ix)
+        parts = []
+        for kk in sorted(by_k):
+            idxs = by_k[kk]
+            mat = np.asarray([sub_list[i] for i in idxs], dtype=np.int64)
+            inter = np.bitwise_and.reduce(bits[mat], axis=1)
+            parts.append((idxs, popcount_rows(inter).astype(np.int64)))
+        flat = np.concatenate([p for _, p in parts])
+        if reduce_fn is not None:
+            flat = reduce_fn(flat)
+        off = 0
+        for idxs, p in parts:
+            sup[idxs] = flat[off : off + len(p)]
+            off += len(p)
+    out: dict[frozenset, int] = {}
+    for cs, cnt in cands.items():
+        if len(cs) == 1:
+            ok = True
+        elif len(cs) == 2:
+            a, b = tuple(cs)
+            ok = bool(freq[a] > tau and freq[b] > tau)
+        else:
+            ok = all(sup[ix] > tau for ix in refs_of[cs])
+        if ok:
+            out[cs] = cnt
+    return out
+
+
 def _expand_seeds(
     table: ItemTable,
     seeds: list[tuple[int, ...]],
@@ -136,6 +313,7 @@ def _expand_seeds(
     *,
     placement=None,
     resident_bits=None,
+    reduce_fn=None,
 ) -> dict[frozenset, int] | None:
     """All minimal τ-infrequent strict supersets of any seed, up to kmax.
 
@@ -175,7 +353,9 @@ def _expand_seeds(
         from ..core.placement import HostPlacement
 
         placement = HostPlacement()
-    on_device = getattr(placement, "kind", "host") != "host"
+    on_device = (
+        getattr(placement, "kind", "host") != "host" and resident_bits is not None
+    )
     ext_host = bits[ext_universe]  # host copy: seeds the next wave's bits
     if on_device and resident_bits is not None:
         import jax.numpy as jnp
@@ -245,12 +425,13 @@ def _expand_seeds(
                             if len(cs) < kmax:
                                 next_wave.append((cs, fb & ext_host[eidx]))
                         else:
-                            ids_t = tuple(sorted(cs))
-                            if _is_minimal(bits, freq, ids_t, tau):
-                                found[cs] = cnt
+                            # minimality is deferred: one batched subset-
+                            # support pass after the BFS (a single collective
+                            # under a fleet) replaces per-emission probes
+                            found[cs] = cnt
             pipe.retire()
         wave = next_wave
-    return found
+    return _filter_minimal(table, found, tau, reduce_fn)
 
 
 def _delta_born(
@@ -260,6 +441,9 @@ def _delta_born(
     tau: int,
     kmax: int,
     budget: int,
+    *,
+    word_map: np.ndarray | None = None,
+    coll=None,
 ) -> dict[frozenset, int] | None:
     """Minimal τ-infrequent itemsets whose base support was 0.
 
@@ -271,6 +455,12 @@ def _delta_born(
     counted vectorised against the full-width bitsets and checked for
     minimality directly. Returns None when the deduplicated candidate pool
     exceeds ``budget``.
+
+    Under a fleet (``word_map`` + ``coll``) each process reconstructs only
+    the delta rows living in its own word stripes, so the candidate pools
+    are unioned by one all-gather and the budget verdict is taken on the
+    *global* pool — either every process falls back to cold mining or none
+    does. Support counts and the minimality filter reduce partial popcounts.
     """
     import itertools
 
@@ -283,38 +473,79 @@ def _delta_born(
     # item-major delta bits -> per-row item lists (delta-scaled unpack)
     flat = np.unpackbits(
         np.ascontiguousarray(dbits).view(np.uint8), axis=1, bitorder="little"
-    )  # (n_items, Wd*32); column j = global row (base_rows//32)*32 + j
-    lo = (base_rows // 32) * 32
-    row_items = flat[:, base_rows - lo : n - lo]  # (n_items, d)
+    )  # (n_items, W*32); column j of word w = that word's row (w*32 + j)
+    if word_map is None:
+        lo = (base_rows // 32) * 32
+        row_items = flat[:, base_rows - lo : n - lo]  # (n_items, d)
+    else:
+        # sharded width: column c covers global row word_map[c // 32]*32 +
+        # c % 32; keep this process's columns inside the delta row range
+        wm = np.asarray(word_map, dtype=np.int64)
+        grow = wm.repeat(32) * 32 + np.tile(np.arange(32, dtype=np.int64), len(wm))
+        row_items = flat[:, (grow >= base_rows) & (grow < n)]
     keep = (freq > tau) & (freq < n)
 
     cands: set[tuple[int, ...]] = set()
-    for r in range(d):
+    overflow = False
+    for r in range(row_items.shape[1]):
         items = np.nonzero(row_items[:, r])[0]
         items = items[keep[items]]
         for k in range(2, min(kmax, len(items)) + 1):
             for combo in itertools.combinations(items.tolist(), k):
                 cands.add(combo)
                 if len(cands) > budget:
-                    return None
+                    if coll is None:
+                        return None
+                    overflow = True  # verdict deferred to the global union
+                    break
+            if overflow:
+                break
+        if overflow:
+            break
+    if coll is not None:
+        pools = coll.allgather_obj((sorted(cands), overflow))
+        if any(o for _, o in pools):
+            return None
+        union: set[tuple[int, ...]] = set()
+        for pool, _ in pools:
+            union.update(tuple(c) for c in pool)
+        if len(union) > budget:
+            return None
+        cands = union
 
-    found: dict[frozenset, int] = {}
+    reduce_fn = coll.allreduce_sum if coll is not None else None
+    pre: dict[frozenset, int] = {}
     by_k: dict[int, list[tuple[int, ...]]] = {}
-    for c in cands:
+    for c in sorted(cands):
         by_k.setdefault(len(c), []).append(c)
-    for k, sets_k in by_k.items():
+    parts = []
+    for k in sorted(by_k):
+        sets_k = by_k[k]
         mat = np.asarray(sets_k, dtype=np.int64)  # (r, k)
         counts = popcount_rows(np.bitwise_and.reduce(bits[mat], axis=1))
         dcounts = popcount_rows(np.bitwise_and.reduce(dbits[mat], axis=1))
+        parts.append((sets_k, counts.astype(np.int64), dcounts.astype(np.int64)))
+    if parts and reduce_fn is not None:
+        # one collective for all arities: [counts | dcounts] concatenated
+        flat_counts = np.concatenate(
+            [np.concatenate([c, dc]) for _, c, dc in parts]
+        )
+        flat_counts = reduce_fn(flat_counts)
+        off = 0
+        fixed = []
+        for sets_k, c, dc in parts:
+            r = len(sets_k)
+            fixed.append((sets_k, flat_counts[off : off + r], flat_counts[off + r : off + 2 * r]))
+            off += 2 * r
+        parts = fixed
+    for sets_k, counts, dcounts in parts:
         for ids, cnt, dcnt in zip(sets_k, counts, dcounts):
             cnt = int(cnt)
             # cnt == dcnt <=> base support 0: itemsets present at the base are
             # exactly the family already covered by recount + seed expansion
-            if 1 <= cnt <= tau and cnt == int(dcnt) and _is_minimal(
-                bits, freq, ids, tau
-            ):
-                found[frozenset(ids)] = cnt
-    return found
+            if 1 <= cnt <= tau and cnt == int(dcnt):
+                pre[frozenset(ids)] = cnt
+    return _filter_minimal(table, pre, tau, reduce_fn)
 
 
 def _light_prep(table: ItemTable, tau: int) -> Preprocessed:
@@ -351,6 +582,7 @@ def mine_incremental(
     table: ItemTable | None = None,
     placement=None,
     resident_bits=None,
+    bands: "ResultBands | None" = None,
 ) -> tuple[MiningResult, dict] | None:
     """Delta-mine the store against a cached base result.
 
@@ -361,10 +593,13 @@ def mine_incremental(
     expansion through the service's placement and the store's
     device-resident bitsets (``DatasetStore.device_bits``) instead of
     rebuilding host levels; omitted, the expansion runs on host numpy —
-    results are bit-identical either way. Returns ``(result, info)`` or
-    ``None`` when the caller should fall back to a cold mine (delta too
-    large, expansion budget exhausted, or a config the incremental
-    invariants don't cover).
+    results are bit-identical either way. ``bands`` is the cached
+    :class:`ResultBands` companion of ``base_result`` (built on the fly when
+    absent, so callers without a cache still get the shrunken recount). A
+    ``FleetPlacement`` switches every stage into its collective form (see
+    module docstring). Returns ``(result, info)`` or ``None`` when the
+    caller should fall back to a cold mine (delta too large, expansion
+    budget exhausted, or a config the incremental invariants don't cover).
     """
     inc = inc_config or IncrementalConfig()
     if not inc.enabled or config.expansion != "full" or config.kmax < 1:
@@ -388,11 +623,29 @@ def mine_incremental(
 
     tau, kmax = config.tau, config.kmax
 
-    # 1. recount every cached result on the appended rows only
-    dbits = _delta_bits_of(table, base_rows)
+    # fleet mode: partial popcounts over local word stripes, reduced through
+    # the placement's collective; every budget/branch decision below is a
+    # function of global values so the processes stay in lockstep
+    if placement is None:
+        placement = getattr(config, "placement", None)
+    fleet = getattr(placement, "kind", None) == "fleet"
+    coll = placement.collective if fleet else None
+    reduce_fn = coll.allreduce_sum if fleet else None
+    shard = tuple(getattr(store, "shard", (0, 1)))
+    word_map = store.word_map(table.n_words) if shard[1] > 1 else None
+
+    # 1. recount cached results on the appended rows — only where the
+    # per-item delta-frequency bound admits a non-zero delta support
+    dbits = _delta_bits_of(table, base_rows, word_map)
+    dfreq = popcount_rows(dbits).astype(np.int64)
+    if reduce_fn is not None:
+        dfreq = reduce_fn(dfreq)
+    if bands is None:
+        bands = ResultBands.from_result(base_result.itemsets)
     old_sets = [ids for ids, _ in base_result.itemsets]
-    old_counts = np.asarray([c for _, c in base_result.itemsets], dtype=np.int64)
-    new_counts = old_counts + delta_support(dbits, old_sets)
+    new_counts, band_stats = bands.recount(
+        dbits, dfreq, tau, delta_rows, reduce_fn
+    )
 
     results: list[tuple[tuple[int, ...], int]] = []
     seeds: list[tuple[int, ...]] = []
@@ -422,6 +675,7 @@ def mine_incremental(
         inc.expansion_budget,
         placement=placement,
         resident_bits=resident_bits,
+        reduce_fn=reduce_fn,
     )
     if expanded is None:
         return None
@@ -429,7 +683,14 @@ def mine_incremental(
     # 4. delta-born itemsets: absent at the base (support 0 is never cached),
     # supported entirely inside the appended block
     born = _delta_born(
-        table, dbits, base_rows, tau, kmax, inc.delta_candidate_budget
+        table,
+        dbits,
+        base_rows,
+        tau,
+        kmax,
+        inc.delta_candidate_budget,
+        word_map=word_map,
+        coll=coll,
     )
     if born is None:
         return None
@@ -466,6 +727,9 @@ def mine_incremental(
         "n_seeds": len(seeds),
         "n_expanded": n_expanded,
         "n_delta_born": len(born),
-        "n_recounted": len(old_sets),
+        "n_cached": len(old_sets),
+        **band_stats,
     }
+    if fleet:
+        info["fleet"] = coll.stats()
     return result, info

@@ -270,6 +270,9 @@ class DurableStore:
                     placement=self.placement,
                     compact_threshold=self._store_kw.get("compact_threshold"),
                     keep_versions=self._store_kw.get("keep_versions", 8),
+                    # configured process shard: local stripes must be
+                    # recovered by the process that wrote them
+                    shard=self._store_kw.get("shard"),
                 )
                 snapshot_version = self.store.version
             replayed = skipped = 0
